@@ -1,0 +1,69 @@
+"""Paper reproduction benchmarks — Figs. 5 and 6 of Boing et al. (2022).
+
+Fig. 5: % requests answered within deadline, FIFO vs preferential queue,
+scenarios 1-3.  Fig. 6: forwarding rate (of max possible referrals).
+Plus the ablations discussed in DESIGN.md §2 (forced-push compaction
+reading) and beyond-paper comparisons (EDF, smarter forwarding).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.core.simulator import run_experiment
+
+PAPER_DELTAS = {  # published improvements (preferential - FIFO), pp
+    1: {"met": 2.92, "fwd": 2.61},
+    2: {"met": 5.97, "fwd": 6.49},
+    3: {"met": 0.01, "fwd": 0.43},
+}
+
+
+def fig5_fig6(n_seeds: int = 10) -> List[Tuple[str, float, str]]:
+    rows = []
+    for scenario in (1, 2, 3):
+        t0 = time.time()
+        res: Dict[str, object] = {}
+        for queue in ("fifo", "preferential"):
+            res[queue] = run_experiment(scenario, queue, n_seeds=n_seeds)
+        us = (time.time() - t0) / max(1, 2 * n_seeds) * 1e6
+        f, p = res["fifo"], res["preferential"]
+        dmet = 100 * (p.met_rate_mean - f.met_rate_mean)
+        dfwd = 100 * (f.forward_rate_mean - p.forward_rate_mean)
+        rows.append((f"fig5_s{scenario}_fifo_met_pct", us,
+                     f"{100 * f.met_rate_mean:.2f}"))
+        rows.append((f"fig5_s{scenario}_pref_met_pct", us,
+                     f"{100 * p.met_rate_mean:.2f}"))
+        rows.append((f"fig5_s{scenario}_delta_pp", us,
+                     f"{dmet:+.2f} (paper {PAPER_DELTAS[scenario]['met']:+.2f})"))
+        rows.append((f"fig6_s{scenario}_fifo_fwd_pct", us,
+                     f"{100 * f.forward_rate_mean:.2f}"))
+        rows.append((f"fig6_s{scenario}_pref_fwd_pct", us,
+                     f"{100 * p.forward_rate_mean:.2f}"))
+        rows.append((f"fig6_s{scenario}_delta_pp", us,
+                     f"{dfwd:+.2f} (paper {PAPER_DELTAS[scenario]['fwd']:+.2f})"))
+    return rows
+
+
+def ablations(n_seeds: int = 6) -> List[Tuple[str, float, str]]:
+    rows = []
+    t0 = time.time()
+    cases = [
+        ("pref_compact_literal", dict(queue="preferential_compact")),
+        ("edf_exact_admission", dict(queue="edf")),
+        ("pref_discard_beraldi9", dict(queue="preferential",
+                                       discard_on_exhaust=True)),
+        ("pref_po2_forwarding", dict(queue="preferential",
+                                     forward_policy="power_of_two")),
+        ("pref_least_loaded_fwd", dict(queue="preferential",
+                                       forward_policy="least_loaded")),
+        ("fifo_po2_forwarding", dict(queue="fifo",
+                                     forward_policy="power_of_two")),
+    ]
+    for name, kw in cases:
+        res = run_experiment(1, n_seeds=n_seeds, **kw)
+        us = (time.time() - t0) / n_seeds * 1e6
+        rows.append((f"ablate_s1_{name}_met_pct", us,
+                     f"{100 * res.met_rate_mean:.2f}"))
+        t0 = time.time()
+    return rows

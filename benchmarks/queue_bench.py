@@ -1,0 +1,52 @@
+"""Queue micro-benchmarks: push/pop cost vs depth, faithful vs fast.
+
+Quantifies the beyond-paper O(log n) feasibility search (DESIGN.md §2)
+against the paper's O(n) tail→head walk.
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import List, Tuple
+
+from repro.core.block_queue import FastPreferentialQueue, PreferentialQueue
+from repro.core.queues import FIFOQueue
+from repro.core.request import Request, Service
+
+
+def _requests(n: int, seed: int = 0) -> List[Request]:
+    rng = random.Random(seed)
+    out = []
+    t = 0.0
+    for _ in range(n):
+        t += rng.uniform(0, 5)
+        p = rng.choice([20.0, 44.0, 180.0])
+        d = rng.choice([4000.0, 9000.0])
+        svc = Service(f"p{p}", 1, "bench", p, d)
+        out.append(Request(service=svc, arrival_time=t, origin_node=0))
+    return out
+
+
+def bench_queue(queue_cls, n: int, seed: int = 0) -> float:
+    """Seconds per push (amortized) at depth ~n under overload."""
+    reqs = _requests(n, seed)
+    q = queue_cls()
+    t0 = time.perf_counter()
+    for r in reqs:
+        q.push(r, cpu_free_time=r.arrival_time, forced=True)
+    return (time.perf_counter() - t0) / n
+
+
+def run(depths=(100, 1000, 4000)) -> List[Tuple[str, float, str]]:
+    rows = []
+    for n in depths:
+        t_faith = bench_queue(PreferentialQueue, n)
+        t_fast = bench_queue(FastPreferentialQueue, n)
+        t_fifo = bench_queue(FIFOQueue, n)
+        rows.append((f"queue_push_faithful_n{n}", t_faith * 1e6,
+                     f"{t_faith * 1e6:.1f}us"))
+        rows.append((f"queue_push_fast_n{n}", t_fast * 1e6,
+                     f"speedup {t_faith / max(t_fast, 1e-12):.1f}x"))
+        rows.append((f"queue_push_fifo_n{n}", t_fifo * 1e6,
+                     f"{t_fifo * 1e6:.2f}us"))
+    return rows

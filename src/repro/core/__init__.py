@@ -1,0 +1,21 @@
+"""Core contribution of Boing et al. (2022): deadline-aware distributed load
+orchestration with a preferential (time-block) queue, plus the MEC-LB
+simulation environment used for the paper's experiments."""
+
+from repro.core.block_queue import Block, FastPreferentialQueue, PreferentialQueue
+from repro.core.node import MECNode, NodeMetrics
+from repro.core.queues import EDFQueue, FIFOQueue
+from repro.core.request import Request, Service, SERVICES, SERVICE_ORDER
+from repro.core.scenarios import (DEFAULT_ARRIVAL_WINDOW, SCENARIOS,
+                                  generate_requests, total_requests)
+from repro.core.simulator import (AggregateResult, SimConfig, SimResult,
+                                  make_queue, run_experiment, run_simulation)
+
+__all__ = [
+    "Block", "FastPreferentialQueue", "PreferentialQueue",
+    "MECNode", "NodeMetrics", "EDFQueue", "FIFOQueue",
+    "Request", "Service", "SERVICES", "SERVICE_ORDER",
+    "DEFAULT_ARRIVAL_WINDOW", "SCENARIOS", "generate_requests", "total_requests",
+    "AggregateResult", "SimConfig", "SimResult",
+    "make_queue", "run_experiment", "run_simulation",
+]

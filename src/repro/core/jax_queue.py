@@ -1,0 +1,160 @@
+"""JAX-native preferential queue: the paper's admission test on the
+accelerator.
+
+The host-side queue (core/block_queue.py) decides one admission at a time.
+At pod scale the orchestrator wants to score MANY candidate placements at
+once — e.g. "which of 16 replica groups can serve each of these 64
+requests within deadline?" — as one device call.  This module re-derives
+the preferential-queue math (DESIGN.md §2) as fixed-capacity array ops:
+
+* the ledger is (starts, ends, sizes, n) arrays sorted by time;
+* the feasibility test is the same two-bisect search as
+  FastPreferentialQueue (searchsorted + prefix sums);
+* the Fig. 2c-d cascade left-shift has a closed form — after inserting at
+  position j with right edge ``cap``::
+
+      new_end_i = min(end_i, cap - p_new - sum(sizes[i+1 .. j-1]))   (i < j)
+
+  computed with one reversed cumulative sum — so a push is fully
+  vectorized (no sequential pointer walk);
+* ``feasible_batch`` vmaps the test over candidate requests (read-only),
+  which is what the deadline-aware engine uses for replica scoring.
+
+Property-tested against the host queue in tests/test_jax_queue.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+class Ledger(NamedTuple):
+    starts: jnp.ndarray       # (N,) f32, +BIG past n
+    ends: jnp.ndarray         # (N,) f32, +BIG past n
+    sizes: jnp.ndarray        # (N,) f32, 0 past n
+    n: jnp.ndarray            # scalar int32
+
+
+def empty_ledger(capacity: int) -> Ledger:
+    return Ledger(
+        starts=jnp.full((capacity,), BIG, jnp.float32),
+        ends=jnp.full((capacity,), BIG, jnp.float32),
+        sizes=jnp.zeros((capacity,), jnp.float32),
+        n=jnp.zeros((), jnp.int32),
+    )
+
+
+def _search(led: Ledger, p, d, cpu_free) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                  jnp.ndarray]:
+    """(feasible, position j, right edge cap) — mirrors
+    FastPreferentialQueue._search_alloc_space."""
+    starts, ends, sizes, n = led
+    idx = jnp.arange(starts.shape[0])
+    cap_idx = jnp.searchsorted(starts, d)            # first start >= d
+    e_hi = jnp.searchsorted(ends, d)                 # count of ends < d
+
+    # interior gaps: position i (1..n-1) has a gap iff starts[i] > ends[i-1]
+    prev_ends = jnp.concatenate([jnp.array([-BIG], jnp.float32), ends[:-1]])
+    has_gap = (starts > prev_ends) & (idx >= 1) & (idx < n)
+    gap_ok = has_gap & (idx <= e_hi)
+    prev_gap = jnp.max(jnp.where(gap_ok, idx, 0))
+
+    no_straddle = e_hi >= cap_idx
+    j = jnp.where(no_straddle, e_hi, prev_gap)
+    start_j = jnp.where(j < n, starts[jnp.minimum(j, starts.shape[0] - 1)],
+                        BIG)
+    cap = jnp.where(no_straddle, d, jnp.minimum(start_j, d))
+    # j == 0 straddle fallback: front window
+    start0 = jnp.where(n > 0, starts[0], BIG)
+    cap = jnp.where(~no_straddle & (prev_gap == 0),
+                    jnp.minimum(start0, d), cap)
+    j = jnp.where(~no_straddle & (prev_gap == 0), 0, j)
+
+    pw = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(sizes)])
+    pw_j = pw[jnp.minimum(j, pw.shape[0] - 1)]
+    feasible = cap - (cpu_free + pw_j) >= p - 1e-6
+    front_ok = cap > cpu_free
+    return feasible & front_ok, j, cap
+
+
+@functools.partial(jax.jit, static_argnames=())
+def feasible(led: Ledger, p: jnp.ndarray, d: jnp.ndarray,
+             cpu_free: jnp.ndarray) -> jnp.ndarray:
+    """Scalar admission test (same semantics as the host queue's push
+    without mutation)."""
+    ok, _, _ = _search(led, p, d, cpu_free)
+    return ok
+
+
+@jax.jit
+def feasible_batch(led: Ledger, ps: jnp.ndarray, ds: jnp.ndarray,
+                   cpu_free: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized admission scoring: (K,) proc times × (K,) deadlines
+    against one ledger — one device call for a whole arrival batch."""
+    return jax.vmap(lambda p, d: feasible(led, p, d, cpu_free))(ps, ds)
+
+
+@jax.jit
+def push(led: Ledger, p: jnp.ndarray, d: jnp.ndarray,
+         cpu_free: jnp.ndarray) -> Tuple[Ledger, jnp.ndarray]:
+    """Admit if feasible; returns (new ledger, admitted flag).
+
+    The cascade left-shift is closed-form: suffix work between each block
+    and the insertion point bounds its new end.
+    """
+    starts, ends, sizes, n = led
+    N = starts.shape[0]
+    ok, j, cap = _search(led, p, d, cpu_free)
+    ok = ok & (n < N)
+
+    new_start = cap - p
+    idx = jnp.arange(N)
+
+    # work of blocks strictly between i and j: suffix sums of sizes[:j]
+    sz_before_j = jnp.where(idx < j, sizes, 0.0)
+    total_before = jnp.sum(sz_before_j)
+    csum = jnp.cumsum(sz_before_j)                  # inclusive
+    between = total_before - csum                   # sum over (i, j)
+    bound = new_start - between
+    new_ends = jnp.where(idx < j, jnp.minimum(ends, bound), ends)
+    new_starts = jnp.where(idx < j, new_ends - sizes, starts)
+
+    # insert at j: entries >= j shift right by one
+    src = jnp.clip(idx - 1, 0, N - 1)
+    ins_starts = jnp.where(idx < j, new_starts,
+                           jnp.where(idx == j, new_start, new_starts[src]))
+    ins_ends = jnp.where(idx < j, new_ends,
+                         jnp.where(idx == j, cap, new_ends[src]))
+    ins_sizes = jnp.where(idx < j, sizes,
+                          jnp.where(idx == j, p, sizes[src]))
+
+    out = Ledger(
+        starts=jnp.where(ok, ins_starts, starts),
+        ends=jnp.where(ok, ins_ends, ends),
+        sizes=jnp.where(ok, ins_sizes, sizes),
+        n=jnp.where(ok, n + 1, n),
+    )
+    return out, ok
+
+
+@jax.jit
+def pop(led: Ledger) -> Tuple[Ledger, jnp.ndarray]:
+    """Remove the head block; returns (ledger, popped size or 0)."""
+    starts, ends, sizes, n = led
+    has = n > 0
+    size0 = jnp.where(has, sizes[0], 0.0)
+    out = Ledger(
+        starts=jnp.where(has, jnp.concatenate([starts[1:], jnp.array([BIG])]),
+                         starts),
+        ends=jnp.where(has, jnp.concatenate([ends[1:], jnp.array([BIG])]),
+                       ends),
+        sizes=jnp.where(has, jnp.concatenate([sizes[1:], jnp.array([0.0])]),
+                        sizes),
+        n=jnp.where(has, n - 1, n),
+    )
+    return out, size0

@@ -1,0 +1,93 @@
+"""Forwarding policies for the Sequential Forwarding Algorithm family.
+
+The paper forwards to a *uniformly random* neighbor (excluding the current
+node).  We additionally implement the related-work variants the paper
+discusses, as comparison points:
+
+* ``random``        — the paper / SFA [12]: uniform random neighbor.
+* ``power_of_two``  — sample two random neighbors, forward to the one with
+                      less pending work (classic Mitzenmacher po2; a natural
+                      beyond-paper upgrade the paper's future-work hints at).
+* ``least_loaded``  — consult all neighbors, pick the minimum pending work
+                      (Beraldi et al. [11]-style, with full state).
+* ``round_robin``   — deterministic cycling, a no-state baseline.
+
+Policies only read ``pending_work()`` — they never touch queue internals, so
+they compose with any queue discipline.
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Sequence
+
+from repro.core.node import MECNode
+
+
+def _candidates(nodes: Sequence[MECNode], exclude: int) -> List[MECNode]:
+    return [n for n in nodes if n.node_id != exclude]
+
+
+class ForwardPolicy:
+    name = "base"
+
+    def __init__(self, rng: random.Random):
+        self.rng = rng
+
+    def choose(self, nodes: Sequence[MECNode], exclude: int) -> MECNode:
+        raise NotImplementedError
+
+
+class RandomPolicy(ForwardPolicy):
+    name = "random"
+
+    def choose(self, nodes: Sequence[MECNode], exclude: int) -> MECNode:
+        return self.rng.choice(_candidates(nodes, exclude))
+
+
+class PowerOfTwoPolicy(ForwardPolicy):
+    name = "power_of_two"
+
+    def choose(self, nodes: Sequence[MECNode], exclude: int) -> MECNode:
+        cands = _candidates(nodes, exclude)
+        if len(cands) == 1:
+            return cands[0]
+        a, b = self.rng.sample(cands, 2)
+        return a if a.queue.pending_work() <= b.queue.pending_work() else b
+
+
+class LeastLoadedPolicy(ForwardPolicy):
+    name = "least_loaded"
+
+    def choose(self, nodes: Sequence[MECNode], exclude: int) -> MECNode:
+        cands = _candidates(nodes, exclude)
+        return min(cands, key=lambda n: (n.queue.pending_work(), self.rng.random()))
+
+
+class RoundRobinPolicy(ForwardPolicy):
+    name = "round_robin"
+
+    def __init__(self, rng: random.Random):
+        super().__init__(rng)
+        self._next = 0
+
+    def choose(self, nodes: Sequence[MECNode], exclude: int) -> MECNode:
+        cands = _candidates(nodes, exclude)
+        node = cands[self._next % len(cands)]
+        self._next += 1
+        return node
+
+
+FORWARD_POLICIES = {
+    "random": RandomPolicy,
+    "power_of_two": PowerOfTwoPolicy,
+    "least_loaded": LeastLoadedPolicy,
+    "round_robin": RoundRobinPolicy,
+}
+
+
+def make_policy(name: str, rng: random.Random) -> ForwardPolicy:
+    try:
+        return FORWARD_POLICIES[name](rng)
+    except KeyError:
+        raise ValueError(f"unknown forward policy {name!r}; "
+                         f"options: {sorted(FORWARD_POLICIES)}") from None

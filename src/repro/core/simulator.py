@@ -1,0 +1,192 @@
+"""MEC-LB Simulator — discrete-event reproduction of the paper's §IV.
+
+Faithful behaviors:
+
+* users send requests to their nearest MEC node (``Request.origin_node``);
+* admission is decided by the node's queue discipline (FIFO = SFA v1
+  baseline, preferential = the paper's contribution);
+* on rejection the request is forwarded to a randomly chosen neighbor
+  (``max_forwards`` = 2 in all paper experiments); network/scheduling delays
+  are neglected (``forward_delay`` = 0), as in the paper;
+* a request that has exhausted its forwards is force-pushed and processed
+  even if late (the paper uses the non-discarding SFA variant); the
+  Beraldi [9] discard variant is available via ``discard_on_exhaust``;
+* every service always takes its worst-case processing time.
+
+The simulator is deterministic given (scenario, seed): arrival lists are
+regenerated from the seed for every policy so all disciplines see an
+identical workload, while forwarding randomness uses an independent stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import random
+import statistics
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.block_queue import FastPreferentialQueue, PreferentialQueue
+from repro.core.node import MECNode, QueueLike
+from repro.core.policies import make_policy
+from repro.core.queues import EDFQueue, FIFOQueue
+from repro.core.request import Request
+from repro.core.scenarios import DEFAULT_ARRIVAL_WINDOW, SCENARIOS, generate_requests
+
+
+def make_queue(kind: str) -> QueueLike:
+    if kind == "fifo":
+        return FIFOQueue()
+    if kind == "preferential":
+        return FastPreferentialQueue()
+    if kind == "preferential_faithful":
+        return PreferentialQueue()
+    if kind == "preferential_compact":
+        # literal Alg.2 pseudo-code reading of the forced push (ablation)
+        return FastPreferentialQueue(forced_compaction=True)
+    if kind == "edf":
+        return EDFQueue()
+    raise ValueError(f"unknown queue kind {kind!r}")
+
+
+@dataclasses.dataclass
+class SimConfig:
+    scenario: int = 1
+    queue: str = "fifo"                  # fifo | preferential | preferential_faithful | edf
+    forward_policy: str = "random"       # random | power_of_two | least_loaded | round_robin
+    max_forwards: int = 2                # paper: M = 2
+    forward_delay: float = 0.0           # paper neglects network delay
+    discard_on_exhaust: bool = False     # Beraldi [9] variant
+    arrival_window: float = DEFAULT_ARRIVAL_WINDOW
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    config: SimConfig
+    total_requests: int
+    processed: int
+    met_deadline: int
+    forwards: int
+    discarded: int
+    mean_response_time: float
+    per_node_forwards: List[int]
+
+    @property
+    def met_rate(self) -> float:
+        return self.met_deadline / max(1, self.total_requests)
+
+    @property
+    def forward_rate(self) -> float:
+        """Fraction of the maximum possible referrals (paper Fig. 6)."""
+        return self.forwards / max(1, self.total_requests * self.config.max_forwards)
+
+
+_ARRIVAL, _COMPLETE = 0, 1
+
+
+def run_simulation(config: SimConfig,
+                   requests: Optional[Sequence[Request]] = None) -> SimResult:
+    """Run one seeded simulation and return aggregate metrics."""
+    n_nodes = len(SCENARIOS[config.scenario])
+    nodes = [MECNode(i, make_queue(config.queue)) for i in range(n_nodes)]
+    fwd_rng = random.Random((config.seed, "forwarding").__hash__())
+    policy = make_policy(config.forward_policy, fwd_rng)
+
+    if requests is None:
+        requests = generate_requests(config.scenario, config.seed,
+                                     config.arrival_window)
+    total = len(requests)
+
+    seq = itertools.count()
+    heap: List = []
+    for req in requests:
+        heapq.heappush(heap, (req.arrival_time, next(seq), _ARRIVAL, req,
+                              nodes[req.origin_node]))
+
+    forwards = 0
+    discarded = 0
+    completed: List[Request] = []
+
+    def dispatch(node: MECNode, now: float) -> None:
+        req = node.start_next(now)
+        if req is not None:
+            heapq.heappush(heap, (node.busy_until, next(seq), _COMPLETE, req, node))
+
+    while heap:
+        now, _, kind, req, node = heapq.heappop(heap)
+        if kind == _COMPLETE:
+            node.complete(now)
+            completed.append(req)
+            dispatch(node, now)
+            continue
+
+        # ARRIVAL
+        node.metrics.received += 1
+        exhausted = req.forwards >= config.max_forwards
+        forced = exhausted and not config.discard_on_exhaust
+        if node.try_admit(req, now, forced=forced):
+            dispatch(node, now)
+        elif exhausted:
+            discarded += 1
+            node.metrics.discarded += 1
+        else:
+            req.forwards += 1
+            forwards += 1
+            node.metrics.forwards_out += 1
+            target = policy.choose(nodes, exclude=node.node_id)
+            heapq.heappush(heap, (now + config.forward_delay, next(seq),
+                                  _ARRIVAL, req, target))
+
+    met = sum(1 for r in completed if r.met_deadline)
+    resp = [r.completion_time - r.arrival_time for r in completed
+            if r.completion_time is not None]
+    return SimResult(
+        config=config,
+        total_requests=total,
+        processed=len(completed),
+        met_deadline=met,
+        forwards=forwards,
+        discarded=discarded,
+        mean_response_time=statistics.fmean(resp) if resp else 0.0,
+        per_node_forwards=[n.metrics.forwards_out for n in nodes],
+    )
+
+
+@dataclasses.dataclass
+class AggregateResult:
+    met_rate_mean: float
+    met_rate_stdev: float
+    forward_rate_mean: float
+    forward_rate_stdev: float
+    mean_response_time: float
+    n_seeds: int
+
+
+def run_experiment(scenario: int, queue: str, *, n_seeds: int = 40,
+                   forward_policy: str = "random",
+                   arrival_window: float = DEFAULT_ARRIVAL_WINDOW,
+                   max_forwards: int = 2,
+                   discard_on_exhaust: bool = False,
+                   base_seed: int = 0) -> AggregateResult:
+    """Average of ``n_seeds`` simulations — the paper runs 40 per scenario."""
+    met, fwd, resp = [], [], []
+    for s in range(n_seeds):
+        cfg = SimConfig(scenario=scenario, queue=queue,
+                        forward_policy=forward_policy,
+                        arrival_window=arrival_window,
+                        max_forwards=max_forwards,
+                        discard_on_exhaust=discard_on_exhaust,
+                        seed=base_seed + s)
+        res = run_simulation(cfg)
+        met.append(res.met_rate)
+        fwd.append(res.forward_rate)
+        resp.append(res.mean_response_time)
+    return AggregateResult(
+        met_rate_mean=statistics.fmean(met),
+        met_rate_stdev=statistics.stdev(met) if len(met) > 1 else 0.0,
+        forward_rate_mean=statistics.fmean(fwd),
+        forward_rate_stdev=statistics.stdev(fwd) if len(fwd) > 1 else 0.0,
+        mean_response_time=statistics.fmean(resp),
+        n_seeds=n_seeds,
+    )

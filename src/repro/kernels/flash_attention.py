@@ -1,0 +1,122 @@
+"""FlashAttention forward kernel for TPU (pl.pallas_call + BlockSpec).
+
+TPU-native adaptation of the IO-aware attention idea [arXiv:2205.14135]:
+
+* grid = (batch×heads, Q-blocks, KV-blocks); the KV axis is minor-most, so
+  one core revisits the same (bh, qi) output block across ki steps — the
+  online-softmax state (m, l, acc) lives in VMEM scratch between steps
+  (the canonical TPU accumulation pattern; no atomics, no shared-memory
+  reductions as a GPU kernel would use).
+* Q/K/V blocks are VMEM-resident tiles of (block_q × D) / (block_k × D);
+  D is padded to a multiple of 128 lanes by the wrapper in ops.py.
+* causal + sliding-window masks are applied as position bias inside the
+  block; GQA is handled by the K/V index_map (q-head h reads kv-head
+  h // (H // KV)) so no KV replication is materialized.
+
+Validated against ref.flash_attention_ref in interpret mode (CPU) across
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, block_q: int, block_k: int, causal: bool,
+               window: Optional[int], n_k: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = (q_pos < seq_q) & (k_pos < seq_k)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)... stored (bq, 128)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        block_q: int = 128, block_k: int = 128,
+                        sm_scale: Optional[float] = None,
+                        interpret: bool = True) -> jnp.ndarray:
+    """q (BH, S, D); k, v (BH, S, D) — heads already mapped by the wrapper.
+
+    D must be a multiple of 128 (the ops.py wrapper pads; ``sm_scale`` must
+    then be the *unpadded* head-dim scale).
+    """
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    n_q = -(-Sq // block_q)
+    n_k = -(-Sk // block_k)
+    pad_q = n_q * block_q - Sq
+    pad_k = n_k * block_k - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _fa_kernel, scale=sm_scale if sm_scale is not None else D ** -0.5,
+        block_q=block_q, block_k=block_k,
+        causal=causal, window=window, n_k=n_k, seq_q=Sq, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, n_q * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # m
+            pltpu.VMEM((block_q, 1), jnp.float32),     # l
+            pltpu.VMEM((block_q, D), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

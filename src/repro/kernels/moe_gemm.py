@@ -1,0 +1,53 @@
+"""Grouped per-expert GEMM kernel: (E, C, d) x (E, d, f) -> (E, C, f).
+
+The MoE hot spot after dispatch (taxonomy B.2/B.9 "fused MoE GEMM").
+Grid = (E, C-tiles, f-tiles); each program computes one (block_c × block_f)
+MXU tile from a (block_c × d) activation strip and a (d × block_f) weight
+strip, both VMEM-resident.  d strips are loaded whole — for the assigned
+configs (d ≤ 7168 bf16) the working set is ≤ ~4 MB, well inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_gemm_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[0]                                   # (block_c, d)
+    w = w_ref[0]                                   # (d, block_f)
+    o_ref[0] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def moe_gemm(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
+             block_f: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """x (E, C, d); w (E, d, f) -> (E, C, f)."""
+    E, C, d = x.shape
+    f = w.shape[2]
+    block_c = min(block_c, C)
+    block_f = min(block_f, f)
+    nc = -(-C // block_c)
+    nf = -(-f // block_f)
+    pad_c = nc * block_c - C
+    pad_f = nf * block_f - f
+    if pad_c:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, 0)))
+    if pad_f:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad_f)))
+    out = pl.pallas_call(
+        _moe_gemm_kernel,
+        grid=(E, nc, nf),
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e, ci, fi: (e, ci, 0)),
+            pl.BlockSpec((1, d, block_f), lambda e, ci, fi: (e, 0, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ci, fi: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, nc * block_c, nf * block_f), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:, :C, :f]

@@ -1,0 +1,76 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — Python
+evaluation of the kernel body, used for correctness validation.  On a real
+TPU backend ``interpret`` flips to False and the same BlockSpecs compile to
+Mosaic.  Model code selects kernels via the config's ``attn_impl='pallas'``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gemm as _mg
+from repro.kernels import rmsnorm as _rn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """q (B,S,H,D); k,v (B,S,KV,D) -> (B,S,H,D). GQA via head mapping."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    D_pad = (-D) % 128
+    # fold batch x heads; repeat is logical only (index_map equivalent):
+    # we expand KV to H by gathering, which XLA fuses into the kernel feed.
+    kh = jnp.repeat(k, G, axis=2)
+    vh = jnp.repeat(v, G, axis=2)
+    q3 = jnp.moveaxis(q, 2, 1).reshape(B * H, S, D)
+    k3 = jnp.moveaxis(kh, 2, 1).reshape(B * H, S, D)
+    v3 = jnp.moveaxis(vh, 2, 1).reshape(B * H, S, D)
+    if D_pad:
+        q3 = _pad_to(q3, 128, 2)
+        k3 = _pad_to(k3, 128, 2)
+        v3 = _pad_to(v3, 128, 2)
+    out = _fa.flash_attention_fwd(q3, k3, v3, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  sm_scale=D ** -0.5,
+                                  interpret=_interpret())
+    out = out[:, :, :D].reshape(B, H, S, D)
+    return jnp.moveaxis(out, 1, 2)
+
+
+@jax.jit
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """x (..., d) RMS-normalized and scaled by (1 + scale)."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    out = _rn.rmsnorm_fwd(flat, scale, interpret=_interpret())
+    return out.reshape(shape)
+
+
+@jax.jit
+def moe_gemm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(E, C, d) x (E, d, f) -> (E, C, f) grouped GEMM."""
+    return _mg.moe_gemm(x, w, interpret=_interpret())

@@ -1,0 +1,84 @@
+"""Production mesh construction + logical-rule installation.
+
+The mesh is built by a FUNCTION (not a module-level constant) so importing
+this module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+from repro.distributed import sharding as shd
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / local drivers)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def install_rules(mesh: Mesh, cfg, global_batch: int,
+                  kind: str = "train") -> dict:
+    """Install logical→physical axis rules for one (mesh, config, shape).
+
+    * dp   — batch dims: widest divisible data-parallel combination
+    * fsdp — ZeRO weight sharding: 'data' (+ 'pod' for configs flagged
+             zero_over_pods, e.g. the 1T MoE whose optimizer state cannot
+             fit HBM otherwise)
+    * tp   — tensor/expert parallel dims: 'model'
+    * seq  — decode KV-cache sequence dim: 'model' (+ 'data' when the batch
+             cannot use it, e.g. batch-1 long-context decode)
+    """
+    axes = set(mesh.axis_names)
+    dp_spec = shd.batch_spec(mesh, global_batch)
+    dp = dp_spec[0] if len(dp_spec) else None
+
+    fsdp = "data"
+    if getattr(cfg, "zero_over_pods", False) and "pod" in axes:
+        fsdp = ("data", "pod")
+
+    seq = "model"
+    if dp is None and "data" in axes:
+        seq = ("model", "data")
+
+    tp_kv = None
+    kv = getattr(cfg, "n_kv_heads", 0)
+    if kv and kv % mesh.shape["model"] == 0:
+        tp_kv = "model"
+
+    tp = "model"
+    if kind == "decode" and not getattr(cfg, "moe", False):
+        # decode reads every weight once per token: keep weights fully
+        # sharded over BOTH axes and skip per-step ZeRO regathers
+        # (EXPERIMENTS.md §Perf iteration B1); MoE expert dims do not
+        # divide model x data, so MoE archs keep the train layout.
+        fsdp = None
+        tp = tuple(a for a in ("model", "data") if a in axes)
+
+    # decode-cache layout: KV-head sharding keeps the per-token cache update
+    # local (in-place DUS); sequence sharding is the fallback when KV heads
+    # do not divide the model axis.
+    cache_kv, cache_seq = (tp_kv, None) if tp_kv else (None, seq)
+
+    # spatial parallelism: when the batch cannot use the data axis (hi-res
+    # diffusion at batch 4), shard the image/latent height instead (GSPMD
+    # spatial conv partitioning with halo exchange) — §Perf iteration D.
+    sp = "data" if dp is None else None
+
+    rules = dict(dp=dp, fsdp=fsdp, tp=tp, seq=seq, tp_kv=tp_kv,
+                 cache_kv=cache_kv, cache_seq=cache_seq, sp=sp)
+    shd.set_rules(mesh=mesh, **rules)
+    return rules

@@ -1,0 +1,129 @@
+"""Shared model-building utilities (pure JAX, framework-free).
+
+Parameters are nested dicts of ``jnp`` arrays.  Every model module defines a
+``param_defs(cfg) -> dict[path, ParamDef]`` table from which both
+``param_specs`` (ShapeDtypeStructs for the allocation-free dry-run) and
+``init_params`` (real arrays for smoke tests / training) are derived — the
+two can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    init: str = "normal"        # normal | zeros | ones | embed | head
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+
+def param_specs(defs: Dict[str, ParamDef]) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct tree — no device allocation (dry-run input)."""
+    out: Dict[str, Any] = {}
+    for path, d in defs.items():
+        _assign(out, path, jax.ShapeDtypeStruct(d.shape, d.dtype))
+    return out
+
+
+def init_params(defs: Dict[str, ParamDef], key: jax.Array) -> PyTree:
+    out: Dict[str, Any] = {}
+    keys = jax.random.split(key, len(defs))
+    for (path, d), k in zip(sorted(defs.items()), keys):
+        if d.init == "zeros":
+            val = jnp.zeros(d.shape, d.dtype)
+        elif d.init == "ones":
+            val = jnp.ones(d.shape, d.dtype)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(1, fan_in))
+            val = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(d.dtype)
+        _assign(out, path, val)
+    return out
+
+
+def _assign(tree: Dict[str, Any], path: str, val: Any) -> None:
+    parts = path.split("/")
+    node = tree
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+    node[parts[-1]] = val
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activations (jnp reference; Pallas kernels in repro.kernels)
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               groups: int = 32, eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm over the channel (last) axis of NHWC tensors."""
+    dtype = x.dtype
+    b, h, w, c = x.shape
+    x32 = x.astype(jnp.float32).reshape(b, h, w, groups, c // groups)
+    mu = jnp.mean(x32, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(x32, axis=(1, 2, 4), keepdims=True)
+    y = ((x32 - mu) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# Losses / embeddings
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; logits (..., V) fp32-softmaxed, labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def timestep_embedding(t: jnp.ndarray, dim: int, max_period: float = 10_000.0
+                       ) -> jnp.ndarray:
+    """Sinusoidal diffusion timestep embedding, (B,) -> (B, dim), fp32."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def count_params(tree: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def check_finite(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.all(jnp.isfinite(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.all(jnp.stack(leaves))

@@ -1,0 +1,191 @@
+"""DiT-XL/2 (Peebles & Xie, arXiv:2212.09748): latent diffusion transformer.
+
+adaLN-Zero conditioning on (timestep, class); patch-2 tokenization of the f8
+VAE latent.  ``train_step`` implements the epsilon-prediction DDPM loss;
+``serve_step`` is ONE denoising step — a k-step sampler runs it k times
+(the serving engine owns the loop; roofline rows scale by ``steps``).
+
+The VAE is a frontend stub per the assignment: inputs are latents.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiTConfig
+from repro.distributed import sharding as shd
+from repro.models import attention as attn
+from repro.models import common
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def param_defs(cfg: DiTConfig) -> Dict[str, common.ParamDef]:
+    L, d = cfg.n_layers, cfg.d_model
+    f = cfg.d_ff
+    p, c = cfg.patch, cfg.latent_channels
+    dt = _dtype(cfg)
+    n_tok = cfg.n_tokens()
+    return {
+        "patch_embed/w": common.ParamDef((p, p, c, d), dtype=dt),
+        "patch_embed/b": common.ParamDef((d,), "zeros", dtype=dt),
+        "pos_embed": common.ParamDef((n_tok, d), scale=0.02, dtype=dt),
+        "t_mlp/w1": common.ParamDef((256, d), dtype=dt),
+        "t_mlp/b1": common.ParamDef((d,), "zeros", dtype=dt),
+        "t_mlp/w2": common.ParamDef((d, d), dtype=dt),
+        "t_mlp/b2": common.ParamDef((d,), "zeros", dtype=dt),
+        "y_embed": common.ParamDef((cfg.n_classes + 1, d), "embed", dtype=dt),
+        "layers/adaln": common.ParamDef((L, d, 6 * d), "zeros", dtype=dt),
+        "layers/adaln_b": common.ParamDef((L, 6 * d), "zeros", dtype=dt),
+        "layers/wq": common.ParamDef((L, d, d), dtype=dt),
+        "layers/wk": common.ParamDef((L, d, d), dtype=dt),
+        "layers/wv": common.ParamDef((L, d, d), dtype=dt),
+        "layers/wo": common.ParamDef((L, d, d), dtype=dt),
+        "layers/w_in": common.ParamDef((L, d, f), dtype=dt),
+        "layers/b_in": common.ParamDef((L, f), "zeros", dtype=dt),
+        "layers/w_out": common.ParamDef((L, f, d), dtype=dt),
+        "layers/b_out": common.ParamDef((L, d), "zeros", dtype=dt),
+        "final/adaln": common.ParamDef((d, 2 * d), "zeros", dtype=dt),
+        "final/adaln_b": common.ParamDef((2 * d,), "zeros", dtype=dt),
+        "final/w": common.ParamDef((d, p * p * 2 * c), "zeros", dtype=dt),
+        "final/b": common.ParamDef((p * p * 2 * c,), "zeros", dtype=dt),
+    }
+
+
+def param_specs(cfg): return common.param_specs(param_defs(cfg))
+def init_params(cfg, key): return common.init_params(param_defs(cfg), key)
+
+
+def param_logical(cfg: DiTConfig) -> Dict[str, Tuple]:
+    log = {}
+    for path, d in param_defs(cfg).items():
+        if path.startswith("layers/"):
+            if path.endswith(("_b", "b_in", "b_out")):
+                log[path] = (None, "tp") if path.endswith(("adaln_b", "b_in")) else (None, None)
+            elif path == "layers/wo" or path == "layers/w_out":
+                log[path] = (None, "tp", "fsdp")
+            else:
+                log[path] = (None, "fsdp", "tp")
+        elif len(d.shape) == 2:
+            log[path] = ("fsdp", "tp") if d.shape[0] >= 256 else (None, None)
+        else:
+            log[path] = tuple(None for _ in d.shape)
+    return log
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None, :]) + shift[:, None, :]
+
+
+def _ln(x):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+
+
+def forward(params: PyTree, latents: jnp.ndarray, t: jnp.ndarray,
+            y: jnp.ndarray, cfg: DiTConfig) -> jnp.ndarray:
+    """latents (B, H, W, C), t (B,), y (B,) -> epsilon+sigma (B, H, W, 2C)."""
+    B, Hh, Ww, C = latents.shape
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    p = cfg.patch
+    gh = Hh // p
+
+    x = jax.lax.conv_general_dilated(
+        latents.astype(_dtype(cfg)), params["patch_embed"]["w"],
+        window_strides=(p, p), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = (x + params["patch_embed"]["b"]).reshape(B, gh * gh, d)
+    npos = params["pos_embed"].shape[0]
+    if gh * gh == npos:
+        pos = params["pos_embed"]
+    else:   # interpolate for other resolutions (gen_1024 etc.)
+        g0 = int(npos ** 0.5)
+        pos = params["pos_embed"].reshape(g0, g0, d)
+        pos = jax.image.resize(pos.astype(jnp.float32), (gh, gh, d),
+                               "bilinear").astype(x.dtype).reshape(gh * gh, d)
+    x = shd.hint(x + pos[None], "dp", None, None)
+
+    temb = common.timestep_embedding(t, 256).astype(_dtype(cfg))
+    cvec = jax.nn.silu(temb @ params["t_mlp"]["w1"] + params["t_mlp"]["b1"])
+    cvec = cvec @ params["t_mlp"]["w2"] + params["t_mlp"]["b2"]
+    cvec = cvec + jnp.take(params["y_embed"], y, axis=0)
+    cvec = jax.nn.silu(cvec)
+
+    S = x.shape[1]
+
+    def body(h, lp):
+        mod = jnp.einsum("bd,dk->bk", cvec, lp["adaln"]) + lp["adaln_b"]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        yx = _modulate(_ln(h), sh1, sc1)
+        q = jnp.einsum("bsd,dh->bsh", yx, lp["wq"]).reshape(B, S, nh, hd)
+        k = jnp.einsum("bsd,dh->bsh", yx, lp["wk"]).reshape(B, S, nh, hd)
+        v = jnp.einsum("bsd,dh->bsh", yx, lp["wv"]).reshape(B, S, nh, hd)
+        o = attn.attention(q, k, v, causal=False, impl=cfg.attn_impl,
+                           q_chunk=cfg.attn_chunk)
+        h = h + g1[:, None, :] * jnp.einsum("bsh,hd->bsd",
+                                            o.reshape(B, S, d), lp["wo"])
+        yx2 = _modulate(_ln(h), sh2, sc2)
+        z = common.gelu(jnp.einsum("bsd,df->bsf", yx2, lp["w_in"]) + lp["b_in"])
+        h = h + g2[:, None, :] * (jnp.einsum("bsf,fd->bsd", z, lp["w_out"])
+                                  + lp["b_out"])
+        return shd.hint(h, "dp", None, None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+
+    mod = jnp.einsum("bd,dk->bk", cvec, params["final"]["adaln"]) + \
+        params["final"]["adaln_b"]
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    x = _modulate(_ln(x), sh, sc)
+    out = jnp.einsum("bsd,dk->bsk", x, params["final"]["w"]) + params["final"]["b"]
+    out = out.reshape(B, gh, gh, p, p, 2 * C)
+    out = out.transpose(0, 1, 3, 2, 4, 5).reshape(B, Hh, Ww, 2 * C)
+    return out
+
+
+def ddpm_alphas(n_steps: int = 1000):
+    betas = jnp.linspace(1e-4, 0.02, n_steps, dtype=jnp.float32)
+    alphas = jnp.cumprod(1.0 - betas)
+    return alphas
+
+
+def loss_fn(params, batch, cfg: DiTConfig):
+    """Epsilon-prediction MSE; batch has latents (B,H,W,C), labels, rng."""
+    lat = batch["latents"].astype(jnp.float32)
+    B = lat.shape[0]
+    rng = jax.random.fold_in(jax.random.PRNGKey(0), batch["step"])
+    t = jax.random.randint(jax.random.fold_in(rng, 1), (B,), 0, 1000)
+    eps = jax.random.normal(jax.random.fold_in(rng, 2), lat.shape, jnp.float32)
+    a = ddpm_alphas()[t][:, None, None, None]
+    noised = jnp.sqrt(a) * lat + jnp.sqrt(1 - a) * eps
+    out = forward(params, noised, t, batch["labels"], cfg)
+    pred_eps = out[..., :cfg.latent_channels].astype(jnp.float32)
+    loss = jnp.mean(jnp.square(pred_eps - eps))
+    return loss, {"loss": loss}
+
+
+def make_train_step(cfg: DiTConfig, opt_cfg):
+    from repro.training.optimizer import adamw_update
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(params, grads,
+                                                      opt_state, opt_cfg)
+        return params, opt_state, dict(metrics, **opt_metrics)
+
+    return train_step
+
+
+def serve_step(params, latents, t, y, cfg: DiTConfig):
+    """One DDIM/DDPM denoising step's network evaluation."""
+    return forward(params, latents, t, y, cfg)

@@ -1,0 +1,219 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded dispatch.
+
+TPU-native formulation (DESIGN.md §Hardware-adaptation): tokens are sorted by
+expert id and gathered into a dense (E, C, d) buffer so the expert FFN is one
+grouped einsum on the MXU — the buffer's expert axis shards over the
+``model`` mesh axis (expert parallelism) and GSPMD turns the gather/scatter
+into the canonical MoE all-to-alls.  Tokens over capacity are dropped
+(GShard-style); the residual stream carries them unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import swiglu
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int,
+             capacity_factor: float, min_capacity: int = 4) -> int:
+    c = int(n_tokens * top_k * capacity_factor / n_experts)
+    c = max(min_capacity, c)
+    return min(c, n_tokens)
+
+
+def route_topk(router_logits: jnp.ndarray, top_k: int,
+               n_real: Optional[int] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(T, E) logits -> (gates (T, K) fp32 normalized, experts (T, K) int32).
+
+    ``n_real``: number of real experts — columns beyond it are padding
+    (masked out of routing; see LMConfig.n_experts_pad).
+    """
+    if n_real is not None and n_real < router_logits.shape[-1]:
+        col = jnp.arange(router_logits.shape[-1])
+        router_logits = jnp.where(col[None, :] < n_real, router_logits, -1e30)
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, experts.astype(jnp.int32)
+
+
+def load_balancing_loss(router_logits: jnp.ndarray, experts: jnp.ndarray,
+                        n_experts: int) -> jnp.ndarray:
+    """Switch-style aux loss: E * <fraction routed> . <mean router prob>."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(experts[:, 0], n_experts, dtype=jnp.float32)
+    ce = jnp.mean(one_hot, axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def dispatch_indices(experts: jnp.ndarray, n_experts: int, cap: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sort-based dispatch plan.
+
+    experts: (T, K) int32.  Returns (expert_id (T*K,), slot (T*K,),
+    keep (T*K,) bool) — token-copy i goes to buffer[expert_id[i], slot[i]]
+    iff keep[i].
+    """
+    flat = experts.reshape(-1)                       # (T*K,)
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    # rank of each copy within its expert group
+    ranks = jnp.arange(flat.shape[0]) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left")
+    slot = jnp.zeros_like(flat).at[order].set(ranks)
+    keep = slot < cap
+    return flat, slot.astype(jnp.int32), keep
+
+
+def _local_dispatch_ffn(x: jnp.ndarray, router_w: jnp.ndarray,
+                        w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                        w_down: jnp.ndarray, *, top_k: int,
+                        capacity_factor: float, n_experts: int,
+                        expert_offset,
+                        n_real: Optional[int] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-shard MoE: local tokens, local expert slice (E_loc, d, f).
+
+    ``expert_offset`` is this shard's first expert id (0 when experts are
+    replicated and only d_ff is sharded).  Returns the PARTIAL output (sum
+    over the expert/ffn axis still required) and the local aux loss.
+    """
+    T, d = x.shape
+    E_loc = w_gate.shape[0]
+    n_real = n_real or n_experts
+    logits = jnp.einsum("td,de->te", x, router_w,
+                        preferred_element_type=jnp.float32)
+    gates, experts = route_topk(logits, top_k, n_real=n_real)
+    aux = load_balancing_loss(logits[:, :n_real], experts, n_real)
+    cap = capacity(T, n_real, top_k, capacity_factor)
+
+    eid, slot, keep = dispatch_indices(experts, n_experts, cap)
+    tok = jnp.repeat(jnp.arange(T), top_k)
+    mine = keep & (eid >= expert_offset) & (eid < expert_offset + E_loc)
+    safe_e = jnp.where(mine, eid - expert_offset, 0)
+    safe_s = jnp.where(mine, slot, 0)
+
+    buf = jnp.zeros((E_loc, cap, d), x.dtype)
+    contrib = jnp.where(mine[:, None], x[tok], 0).astype(x.dtype)
+    buf = buf.at[safe_e, safe_s].add(contrib)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = swiglu(g, u)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down)
+
+    flat_gates = gates.reshape(-1)
+    gathered = y[safe_e, safe_s]
+    # combine in the activation dtype (bf16): halves the (T·K, d) combine
+    # traffic and its backward all-reduce; the scatter-add accumulates in
+    # f32 via the out buffer (§Perf A5)
+    weighted = gathered * jnp.where(mine, flat_gates, 0.0
+                                    )[:, None].astype(gathered.dtype)
+    out = jnp.zeros((T, d), jnp.float32).at[tok].add(
+        weighted.astype(jnp.float32))
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn_sharded(x: jnp.ndarray, router_w: jnp.ndarray,
+                    w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                    w_down: jnp.ndarray, *, top_k: int,
+                    capacity_factor: float, mesh, dp_axes, model_axis: str,
+                    fsdp_axes, expert_sharded: bool,
+                    n_real: Optional[int] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """shard_map MoE (beyond-baseline optimization, EXPERIMENTS.md §Perf).
+
+    The einsum/GSPMD formulation sorts and scatters *globally*, which the
+    partitioner lowers to catastrophic all-gathers (the dispatch tensors are
+    token-count sized).  Here dispatch is LOCAL to each data shard:
+
+    * tokens are replicated across the model axis, so each (data, model)
+      device dispatches its own token shard to the experts it owns and a
+      single psum over ``model`` combines expert contributions —
+      the only cross-device traffic is one (T_loc, d) all-reduce per layer
+      plus the (unavoidable) FSDP weight all-gathers;
+    * ``expert_sharded``: experts split over ``model`` (E % mp == 0, kimi);
+      otherwise each expert's d_ff is split (granite's 40 experts).
+    """
+    import functools as _ft
+    from jax.sharding import PartitionSpec as P
+
+    E = router_w.shape[-1]
+    dp = tuple(dp_axes) if dp_axes else ()
+    fa = (fsdp_axes,) if isinstance(fsdp_axes, str) else tuple(fsdp_axes or ())
+
+    if expert_sharded:
+        w_specs = P(model_axis, fa if fa else None, None)
+        wd_spec = P(model_axis, None, fa if fa else None)
+    else:
+        w_specs = P(None, fa if fa else None, model_axis)
+        wd_spec = P(None, model_axis, fa if fa else None)
+
+    def local_fn(x_loc, rw, wg, wu, wd):
+        if fa:
+            wg = jax.lax.all_gather(wg, fa, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, fa, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, fa, axis=2, tiled=True)
+        if expert_sharded:
+            E_loc = wg.shape[0]
+            off = jax.lax.axis_index(model_axis) * E_loc
+        else:
+            off = 0
+        out, aux = _local_dispatch_ffn(
+            x_loc, rw, wg, wu, wd, top_k=top_k,
+            capacity_factor=capacity_factor, n_experts=E, expert_offset=off,
+            n_real=n_real)
+        out = jax.lax.psum(out, model_axis)
+        return out, aux[None]
+
+    out, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp if dp else None, None), P(None, None),
+                  w_specs, w_specs, wd_spec),
+        out_specs=(P(dp if dp else None, None), P(dp if dp else None)),
+    )(x, router_w, w_gate, w_up, w_down)
+    return out, jnp.mean(aux)
+
+
+def moe_ffn(x: jnp.ndarray, router_w: jnp.ndarray, w_gate: jnp.ndarray,
+            w_up: jnp.ndarray, w_down: jnp.ndarray, *, top_k: int,
+            capacity_factor: float,
+            n_real: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (T, d); expert weights (E, d, f) / (E, f, d). Returns (out, aux)."""
+    T, d = x.shape
+    E = router_w.shape[-1]
+    n_real = n_real or E
+    logits = jnp.einsum("td,de->te", x, router_w,
+                        preferred_element_type=jnp.float32)
+    gates, experts = route_topk(logits, top_k)
+    aux = load_balancing_loss(logits, experts, E)
+    cap = capacity(T, E, top_k, capacity_factor)
+
+    eid, slot, keep = dispatch_indices(experts, E, cap)
+    tok = jnp.repeat(jnp.arange(T), top_k)
+    safe_e = jnp.where(keep, eid, 0)
+    safe_s = jnp.where(keep, slot, 0)
+
+    # scatter tokens into the (E, C, d) buffer (dropped copies masked out)
+    buf = jnp.zeros((E, cap, d), x.dtype)
+    contrib = jnp.where(keep[:, None], x[tok], 0).astype(x.dtype)
+    buf = buf.at[safe_e, safe_s].add(contrib)
+
+    # grouped expert FFN (SwiGLU)
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = swiglu(g, u)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down)
+
+    # combine back with gates
+    flat_gates = gates.reshape(-1)
+    gathered = y[safe_e, safe_s]                     # (T*K, d)
+    weighted = gathered.astype(jnp.float32) * jnp.where(
+        keep, flat_gates, 0.0)[:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[tok].add(weighted)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,155 @@
+"""ResNet-50 (bottleneck v1.5) in NHWC with GroupNorm-free BatchNorm.
+
+Training uses batch statistics (GSPMD turns the batch-mean into a cross
+``data``-axis all-reduce, i.e. sync-BN); serving uses the running averages
+carried in the state.  Channels shard over ``model`` (tensor parallelism for
+convolutions is a contraction over the channel axis — MXU-friendly).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ResNetConfig
+from repro.distributed import sharding as shd
+from repro.models import common
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _stage_plan(cfg: ResNetConfig):
+    """[(n_blocks, c_in, c_mid, c_out, stride), ...] per stage."""
+    w = cfg.width
+    plan = []
+    c_in = w
+    for i, n in enumerate(cfg.depths):
+        c_mid = w * (2 ** i)
+        c_out = c_mid * 4
+        stride = 1 if i == 0 else 2
+        plan.append((n, c_in, c_mid, c_out, stride))
+        c_in = c_out
+    return plan
+
+
+def param_defs(cfg: ResNetConfig) -> Dict[str, common.ParamDef]:
+    dt = _dtype(cfg)
+    c_final = cfg.width * (2 ** (len(cfg.depths) - 1)) * 4
+    defs = {
+        "stem/conv": common.ParamDef((7, 7, cfg.in_channels, cfg.width), dtype=dt),
+        "stem/bn/scale": common.ParamDef((cfg.width,), "ones", dtype=jnp.float32),
+        "stem/bn/bias": common.ParamDef((cfg.width,), "zeros", dtype=jnp.float32),
+        "head/w": common.ParamDef((c_final, cfg.n_classes), dtype=dt),
+        "head/b": common.ParamDef((cfg.n_classes,), "zeros", dtype=dt),
+    }
+    for si, (n, c_in, c_mid, c_out, stride) in enumerate(_stage_plan(cfg)):
+        for bi in range(n):
+            cin = c_in if bi == 0 else c_out
+            base = f"stage{si}/block{bi}"
+            defs[f"{base}/conv1"] = common.ParamDef((1, 1, cin, c_mid), dtype=dt)
+            defs[f"{base}/conv2"] = common.ParamDef((3, 3, c_mid, c_mid), dtype=dt)
+            defs[f"{base}/conv3"] = common.ParamDef((1, 1, c_mid, c_out), dtype=dt)
+            for j, c in ((1, c_mid), (2, c_mid), (3, c_out)):
+                defs[f"{base}/bn{j}/scale"] = common.ParamDef((c,), "ones", dtype=jnp.float32)
+                defs[f"{base}/bn{j}/bias"] = common.ParamDef((c,), "zeros", dtype=jnp.float32)
+            if bi == 0:
+                defs[f"{base}/proj"] = common.ParamDef((1, 1, cin, c_out), dtype=dt)
+                defs[f"{base}/bnp/scale"] = common.ParamDef((c_out,), "ones", dtype=jnp.float32)
+                defs[f"{base}/bnp/bias"] = common.ParamDef((c_out,), "zeros", dtype=jnp.float32)
+    return defs
+
+
+def param_specs(cfg): return common.param_specs(param_defs(cfg))
+def init_params(cfg, key): return common.init_params(param_defs(cfg), key)
+
+
+def param_logical(cfg: ResNetConfig) -> Dict[str, Tuple]:
+    log: Dict[str, Tuple] = {}
+    for path, d in param_defs(cfg).items():
+        if path.endswith(("scale", "bias")) or path == "head/b":
+            log[path] = tuple(None for _ in d.shape)
+        elif path == "head/w":
+            log[path] = ("fsdp", "tp")
+        else:   # conv kernels: shard output channels
+            log[path] = tuple([None] * (len(d.shape) - 1) + ["tp"])
+    return log
+
+
+def _bn(x, scale, bias, eps=1e-5):
+    """Batch statistics over (N, H, W) — GSPMD sync-BN across data shards."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x32, axis=(0, 1, 2), keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def forward(params: PyTree, images: jnp.ndarray, cfg: ResNetConfig
+            ) -> jnp.ndarray:
+    x = images.astype(_dtype(cfg))
+    x = jax.lax.conv_general_dilated(
+        x, params["stem"]["conv"], window_strides=(2, 2),
+        padding=((3, 3), (3, 3)), dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.relu(_bn(x, params["stem"]["bn"]["scale"], params["stem"]["bn"]["bias"]))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, (n, c_in, c_mid, c_out, stride) in enumerate(_stage_plan(cfg)):
+        for bi in range(n):
+            bp = params[f"stage{si}"][f"block{bi}"]
+            s = stride if bi == 0 else 1
+            y = jax.nn.relu(_bn(_conv(x, bp["conv1"]), bp["bn1"]["scale"], bp["bn1"]["bias"]))
+            y = jax.nn.relu(_bn(_conv(y, bp["conv2"], s), bp["bn2"]["scale"], bp["bn2"]["bias"]))
+            y = _bn(_conv(y, bp["conv3"]), bp["bn3"]["scale"], bp["bn3"]["bias"])
+            if bi == 0:
+                sc = _bn(_conv(x, bp["proj"], s), bp["bnp"]["scale"], bp["bnp"]["bias"])
+            else:
+                sc = x
+            x = jax.nn.relu(y + sc)
+        x = shd.hint(x, "dp", None, None, "tp")
+    feat = jnp.mean(x.astype(jnp.float32), axis=(1, 2))
+    logits = feat @ params["head"]["w"].astype(jnp.float32) + \
+        params["head"]["b"].astype(jnp.float32)
+    return logits
+
+
+def loss_fn(params, batch, cfg: ResNetConfig):
+    logits = forward(params, batch["images"], cfg)
+    loss = common.softmax_xent(logits, batch["labels"])
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def make_train_step(cfg: ResNetConfig, opt_cfg):
+    from repro.training.optimizer import adamw_update
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(params, grads,
+                                                      opt_state, opt_cfg)
+        return params, opt_state, dict(metrics, **opt_metrics)
+
+    return train_step
+
+
+def serve_step(params, images, cfg: ResNetConfig):
+    return forward(params, images, cfg)
+
+
+# nested-path param defs create nested dicts; expose helper for smoke tests
+def nested(params: PyTree, path: str):
+    node = params
+    for p in path.split("/"):
+        node = node[p]
+    return node

@@ -1,0 +1,263 @@
+"""SD 1.5 UNet (arXiv:2112.10752): latent-space epsilon predictor.
+
+ch=320, mult (1,2,4,4), 2 ResBlocks/level, transformer (self+cross attn to a
+77×768 text-context stub) at levels 0-2, timestep embedding, skip
+connections.  NHWC layout; channels shard over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import UNetConfig
+from repro.distributed import sharding as shd
+from repro.models import attention as attn
+from repro.models import common
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _levels(cfg: UNetConfig) -> List[int]:
+    return [cfg.ch * m for m in cfg.ch_mult]
+
+
+def _conv_def(k, cin, cout, dt, init="normal"):
+    return common.ParamDef((k, k, cin, cout), init, dtype=dt)
+
+
+def param_defs(cfg: UNetConfig) -> Dict[str, common.ParamDef]:
+    dt = _dtype(cfg)
+    ch = cfg.ch
+    temb_d = ch * 4
+    defs: Dict[str, common.ParamDef] = {
+        "t_mlp/w1": common.ParamDef((ch, temb_d), dtype=dt),
+        "t_mlp/b1": common.ParamDef((temb_d,), "zeros", dtype=dt),
+        "t_mlp/w2": common.ParamDef((temb_d, temb_d), dtype=dt),
+        "t_mlp/b2": common.ParamDef((temb_d,), "zeros", dtype=dt),
+        "conv_in": _conv_def(3, cfg.latent_channels, ch, dt),
+        "conv_out": _conv_def(3, ch, cfg.latent_channels, dt, "zeros"),
+        "norm_out/scale": common.ParamDef((ch,), "ones", dtype=jnp.float32),
+        "norm_out/bias": common.ParamDef((ch,), "zeros", dtype=jnp.float32),
+    }
+
+    def res_block(base, cin, cout):
+        defs[f"{base}/n1/scale"] = common.ParamDef((cin,), "ones", dtype=jnp.float32)
+        defs[f"{base}/n1/bias"] = common.ParamDef((cin,), "zeros", dtype=jnp.float32)
+        defs[f"{base}/c1"] = _conv_def(3, cin, cout, dt)
+        defs[f"{base}/temb_w"] = common.ParamDef((temb_d, cout), dtype=dt)
+        defs[f"{base}/temb_b"] = common.ParamDef((cout,), "zeros", dtype=dt)
+        defs[f"{base}/n2/scale"] = common.ParamDef((cout,), "ones", dtype=jnp.float32)
+        defs[f"{base}/n2/bias"] = common.ParamDef((cout,), "zeros", dtype=jnp.float32)
+        defs[f"{base}/c2"] = _conv_def(3, cout, cout, dt, "zeros")
+        if cin != cout:
+            defs[f"{base}/skip"] = _conv_def(1, cin, cout, dt)
+
+    def attn_block(base, c):
+        defs[f"{base}/norm/scale"] = common.ParamDef((c,), "ones", dtype=jnp.float32)
+        defs[f"{base}/norm/bias"] = common.ParamDef((c,), "zeros", dtype=jnp.float32)
+        for nm, shp in (("wq", (c, c)), ("wk", (c, c)), ("wv", (c, c)),
+                        ("wo", (c, c)),
+                        ("cq", (c, c)), ("ck", (cfg.ctx_dim, c)),
+                        ("cv", (cfg.ctx_dim, c)), ("co", (c, c)),
+                        ("ff1", (c, 4 * c)), ("ff2", (4 * c, c))):
+            defs[f"{base}/{nm}"] = common.ParamDef(shp, dtype=dt)
+        defs[f"{base}/ln1/scale"] = common.ParamDef((c,), "ones", dtype=jnp.float32)
+        defs[f"{base}/ln1/bias"] = common.ParamDef((c,), "zeros", dtype=jnp.float32)
+        defs[f"{base}/ln2/scale"] = common.ParamDef((c,), "ones", dtype=jnp.float32)
+        defs[f"{base}/ln2/bias"] = common.ParamDef((c,), "zeros", dtype=jnp.float32)
+        defs[f"{base}/ln3/scale"] = common.ParamDef((c,), "ones", dtype=jnp.float32)
+        defs[f"{base}/ln3/bias"] = common.ParamDef((c,), "zeros", dtype=jnp.float32)
+
+    chans = _levels(cfg)
+    # encoder
+    cin = cfg.ch
+    for li, c in enumerate(chans):
+        for bi in range(cfg.n_res_blocks):
+            res_block(f"down{li}/res{bi}", cin, c)
+            cin = c
+            if li in cfg.attn_levels:
+                attn_block(f"down{li}/attn{bi}", c)
+        if li < len(chans) - 1:
+            defs[f"down{li}/downsample"] = _conv_def(3, c, c, dt)
+    # middle
+    res_block("mid/res0", chans[-1], chans[-1])
+    attn_block("mid/attn", chans[-1])
+    res_block("mid/res1", chans[-1], chans[-1])
+    # decoder (skip concat doubles input channels)
+    for li in reversed(range(len(chans))):
+        c = chans[li]
+        for bi in range(cfg.n_res_blocks + 1):
+            skip_c = _skip_channels(cfg)[li][bi]
+            res_block(f"up{li}/res{bi}", cin + skip_c, c)
+            cin = c
+            if li in cfg.attn_levels:
+                attn_block(f"up{li}/attn{bi}", c)
+        if li > 0:
+            defs[f"up{li}/upsample"] = _conv_def(3, c, c, dt)
+    return defs
+
+
+def _skip_channels(cfg: UNetConfig) -> Dict[int, List[int]]:
+    """Channel count of each skip tensor consumed by the decoder."""
+    chans = _levels(cfg)
+    stack: List[int] = [cfg.ch]                      # conv_in output
+    for li, c in enumerate(chans):
+        for _ in range(cfg.n_res_blocks):
+            stack.append(c)
+        if li < len(chans) - 1:
+            stack.append(c)                           # downsample output
+    out: Dict[int, List[int]] = {}
+    for li in reversed(range(len(chans))):
+        out[li] = [stack.pop() for _ in range(cfg.n_res_blocks + 1)]
+    return out
+
+
+def param_specs(cfg): return common.param_specs(param_defs(cfg))
+def init_params(cfg, key): return common.init_params(param_defs(cfg), key)
+
+
+def param_logical(cfg: UNetConfig) -> Dict[str, Tuple]:
+    log = {}
+    for path, d in param_defs(cfg).items():
+        if len(d.shape) == 4:       # conv: shard output channels
+            log[path] = (None, None, None, "tp")
+        elif len(d.shape) == 2:     # dense: shard columns
+            log[path] = ("fsdp", "tp") if d.shape[0] >= 512 else (None, "tp")
+        else:
+            log[path] = tuple(None for _ in d.shape)
+    return log
+
+
+def _get(params, path):
+    node = params
+    for p in path.split("/"):
+        node = node[p]
+    return node
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _res_block(x, p, temb):
+    h = common.group_norm(x, p["n1"]["scale"], p["n1"]["bias"])
+    h = _conv(jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype), p["c1"])
+    h = h + (jax.nn.silu(temb.astype(jnp.float32)).astype(x.dtype)
+             @ p["temb_w"] + p["temb_b"])[:, None, None, :]
+    h = common.group_norm(h, p["n2"]["scale"], p["n2"]["bias"])
+    h = _conv(jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype), p["c2"])
+    skip = _conv(x, p["skip"]) if "skip" in p else x
+    return h + skip
+
+
+def _attn_block(x, p, ctx, n_heads):
+    B, H, W, C = x.shape
+    hd = C // n_heads
+    h0 = common.group_norm(x, p["norm"]["scale"], p["norm"]["bias"])
+    h = h0.reshape(B, H * W, C)
+    # self-attention
+    y = common.layer_norm(h, p["ln1"]["scale"], p["ln1"]["bias"])
+    q = (y @ p["wq"]).reshape(B, -1, n_heads, hd)
+    k = (y @ p["wk"]).reshape(B, -1, n_heads, hd)
+    v = (y @ p["wv"]).reshape(B, -1, n_heads, hd)
+    o = attn.attention(q, k, v, causal=False, impl="chunked", q_chunk=1024)
+    h = h + o.reshape(B, -1, C) @ p["wo"]
+    # cross-attention to text context
+    y = common.layer_norm(h, p["ln2"]["scale"], p["ln2"]["bias"])
+    q = (y @ p["cq"]).reshape(B, -1, n_heads, hd)
+    k = (ctx @ p["ck"]).reshape(B, -1, n_heads, hd)
+    v = (ctx @ p["cv"]).reshape(B, -1, n_heads, hd)
+    o = attn.attention_naive(q, k, v, causal=False)
+    h = h + o.reshape(B, -1, C) @ p["co"]
+    # feed-forward
+    y = common.layer_norm(h, p["ln3"]["scale"], p["ln3"]["bias"])
+    h = h + common.gelu(y @ p["ff1"]) @ p["ff2"]
+    return x + h.reshape(B, H, W, C)
+
+
+def forward(params: PyTree, latents: jnp.ndarray, t: jnp.ndarray,
+            ctx: jnp.ndarray, cfg: UNetConfig) -> jnp.ndarray:
+    """latents (B,h,w,4), t (B,), ctx (B,77,768) -> epsilon (B,h,w,4)."""
+    x = latents.astype(_dtype(cfg))
+    ctx = ctx.astype(_dtype(cfg))
+    temb = common.timestep_embedding(t, cfg.ch).astype(_dtype(cfg))
+    temb = jax.nn.silu((temb @ params["t_mlp"]["w1"] + params["t_mlp"]["b1"]
+                        ).astype(jnp.float32)).astype(x.dtype)
+    temb = temb @ params["t_mlp"]["w2"] + params["t_mlp"]["b2"]
+
+    chans = _levels(cfg)
+    x = _conv(x, params["conv_in"])
+    skips = [x]
+    for li, c in enumerate(chans):
+        lvl = params[f"down{li}"]
+        for bi in range(cfg.n_res_blocks):
+            x = _res_block(x, lvl[f"res{bi}"], temb)
+            if li in cfg.attn_levels:
+                x = _attn_block(x, lvl[f"attn{bi}"], ctx, cfg.n_heads)
+            skips.append(x)
+        if li < len(chans) - 1:
+            x = _conv(x, lvl["downsample"], stride=2)
+            skips.append(x)
+        x = shd.hint(x, "dp", "sp", None, "tp")
+
+    mid = params["mid"]
+    x = _res_block(x, mid["res0"], temb)
+    x = _attn_block(x, mid["attn"], ctx, cfg.n_heads)
+    x = _res_block(x, mid["res1"], temb)
+
+    for li in reversed(range(len(chans))):
+        lvl = params[f"up{li}"]
+        for bi in range(cfg.n_res_blocks + 1):
+            x = jnp.concatenate([x, skips.pop()], axis=-1)
+            x = _res_block(x, lvl[f"res{bi}"], temb)
+            if li in cfg.attn_levels:
+                x = _attn_block(x, lvl[f"attn{bi}"], ctx, cfg.n_heads)
+        if li > 0:
+            B, H, W, C = x.shape
+            x = jax.image.resize(x, (B, H * 2, W * 2, C), "nearest")
+            x = _conv(x, lvl["upsample"])
+        x = shd.hint(x, "dp", "sp", None, "tp")
+
+    x = common.group_norm(x, params["norm_out"]["scale"], params["norm_out"]["bias"])
+    x = _conv(jax.nn.silu(x.astype(jnp.float32)).astype(x.dtype),
+              params["conv_out"])
+    return x
+
+
+def loss_fn(params, batch, cfg: UNetConfig):
+    from repro.models.dit import ddpm_alphas
+    lat = batch["latents"].astype(jnp.float32)
+    B = lat.shape[0]
+    rng = jax.random.fold_in(jax.random.PRNGKey(0), batch["step"])
+    t = jax.random.randint(jax.random.fold_in(rng, 1), (B,), 0, 1000)
+    eps = jax.random.normal(jax.random.fold_in(rng, 2), lat.shape, jnp.float32)
+    a = ddpm_alphas()[t][:, None, None, None]
+    noised = jnp.sqrt(a) * lat + jnp.sqrt(1 - a) * eps
+    pred = forward(params, noised, t, batch["ctx"], cfg).astype(jnp.float32)
+    loss = jnp.mean(jnp.square(pred - eps))
+    return loss, {"loss": loss}
+
+
+def make_train_step(cfg: UNetConfig, opt_cfg):
+    from repro.training.optimizer import adamw_update
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(params, grads,
+                                                      opt_state, opt_cfg)
+        return params, opt_state, dict(metrics, **opt_metrics)
+
+    return train_step
+
+
+def serve_step(params, latents, t, ctx, cfg: UNetConfig):
+    return forward(params, latents, t, ctx, cfg)

@@ -1,0 +1,169 @@
+"""Vision Transformer (ViT-L/16, ViT-H/14) and DeiT-B (distillation token).
+
+Patch-embedding is part of the model (vision pool rule).  Pre-LN blocks,
+learned positional embeddings, GELU MLP, mean-free CLS-token classifier.
+Pos-embeddings are sized for the config resolution and bilinearly
+interpolated for other resolutions (cls_384 fine-tune shape).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ViTConfig
+from repro.distributed import sharding as shd
+from repro.models import attention as attn
+from repro.models import common
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def param_defs(cfg: ViTConfig) -> Dict[str, common.ParamDef]:
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    p, c = cfg.patch, cfg.in_channels
+    dt = _dtype(cfg)
+    n_extra = 1 + int(cfg.distill_token)
+    n_tok = (cfg.img_res // p) ** 2 + n_extra
+    defs = {
+        "patch_embed/w": common.ParamDef((p, p, c, d), dtype=dt),
+        "patch_embed/b": common.ParamDef((d,), "zeros", dtype=dt),
+        "cls_token": common.ParamDef((n_extra, d), "zeros", dtype=dt),
+        "pos_embed": common.ParamDef((n_tok, d), scale=0.02, dtype=dt),
+        "final_ln/scale": common.ParamDef((d,), "ones", dtype=dt),
+        "final_ln/bias": common.ParamDef((d,), "zeros", dtype=dt),
+        "head/w": common.ParamDef((d, cfg.n_classes), dtype=dt),
+        "head/b": common.ParamDef((cfg.n_classes,), "zeros", dtype=dt),
+        "layers/ln1/scale": common.ParamDef((L, d), "ones", dtype=dt),
+        "layers/ln1/bias": common.ParamDef((L, d), "zeros", dtype=dt),
+        "layers/ln2/scale": common.ParamDef((L, d), "ones", dtype=dt),
+        "layers/ln2/bias": common.ParamDef((L, d), "zeros", dtype=dt),
+        "layers/wq": common.ParamDef((L, d, d), dtype=dt),
+        "layers/wk": common.ParamDef((L, d, d), dtype=dt),
+        "layers/wv": common.ParamDef((L, d, d), dtype=dt),
+        "layers/wo": common.ParamDef((L, d, d), dtype=dt),
+        "layers/bq": common.ParamDef((L, d), "zeros", dtype=dt),
+        "layers/bk": common.ParamDef((L, d), "zeros", dtype=dt),
+        "layers/bv": common.ParamDef((L, d), "zeros", dtype=dt),
+        "layers/bo": common.ParamDef((L, d), "zeros", dtype=dt),
+        "layers/w_in": common.ParamDef((L, d, f), dtype=dt),
+        "layers/b_in": common.ParamDef((L, f), "zeros", dtype=dt),
+        "layers/w_out": common.ParamDef((L, f, d), dtype=dt),
+        "layers/b_out": common.ParamDef((L, d), "zeros", dtype=dt),
+    }
+    return defs
+
+
+def param_specs(cfg): return common.param_specs(param_defs(cfg))
+def init_params(cfg, key): return common.init_params(param_defs(cfg), key)
+
+
+def param_logical(cfg: ViTConfig) -> Dict[str, Tuple]:
+    return {
+        "patch_embed/w": (None, None, None, "tp"),
+        "patch_embed/b": ("tp",),
+        "cls_token": (None, None),
+        "pos_embed": (None, None),
+        "final_ln/scale": (None,), "final_ln/bias": (None,),
+        "head/w": ("fsdp", "tp"), "head/b": ("tp",),
+        "layers/ln1/scale": (None, None), "layers/ln1/bias": (None, None),
+        "layers/ln2/scale": (None, None), "layers/ln2/bias": (None, None),
+        "layers/wq": (None, "fsdp", "tp"),
+        "layers/wk": (None, "fsdp", "tp"),
+        "layers/wv": (None, "fsdp", "tp"),
+        "layers/wo": (None, "tp", "fsdp"),
+        "layers/bq": (None, "tp"), "layers/bk": (None, "tp"),
+        "layers/bv": (None, "tp"), "layers/bo": (None, None),
+        "layers/w_in": (None, "fsdp", "tp"), "layers/b_in": (None, "tp"),
+        "layers/w_out": (None, "tp", "fsdp"), "layers/b_out": (None, None),
+    }
+
+
+def _interp_pos_embed(pos: jnp.ndarray, n_extra: int, grid_from: int,
+                      grid_to: int) -> jnp.ndarray:
+    """Bilinear pos-embed interpolation for resolution changes."""
+    if grid_from == grid_to:
+        return pos
+    extra, grid = pos[:n_extra], pos[n_extra:]
+    d = grid.shape[-1]
+    grid = grid.reshape(grid_from, grid_from, d)
+    grid = jax.image.resize(grid.astype(jnp.float32),
+                            (grid_to, grid_to, d), "bilinear").astype(pos.dtype)
+    return jnp.concatenate([extra, grid.reshape(grid_to * grid_to, d)], axis=0)
+
+
+def forward(params: PyTree, images: jnp.ndarray, cfg: ViTConfig
+            ) -> jnp.ndarray:
+    """images (B, H, W, C) -> logits (B, n_classes)."""
+    B, H, W, C = images.shape
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    n_extra = 1 + int(cfg.distill_token)
+
+    x = jax.lax.conv_general_dilated(
+        images.astype(_dtype(cfg)), params["patch_embed"]["w"],
+        window_strides=(cfg.patch, cfg.patch), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = x + params["patch_embed"]["b"]
+    gh = H // cfg.patch
+    x = x.reshape(B, gh * gh, d)
+    tok = jnp.broadcast_to(params["cls_token"][None], (B, n_extra, d)).astype(x.dtype)
+    x = jnp.concatenate([tok, x], axis=1)
+    pos = _interp_pos_embed(params["pos_embed"], n_extra,
+                            cfg.img_res // cfg.patch, gh)
+    x = x + pos[None]
+    x = shd.hint(x, "dp", None, None)
+    S = x.shape[1]
+
+    def body(h, lp):
+        y = common.layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        q = (jnp.einsum("bsd,dh->bsh", y, lp["wq"]) + lp["bq"]).reshape(B, S, nh, hd)
+        k = (jnp.einsum("bsd,dh->bsh", y, lp["wk"]) + lp["bk"]).reshape(B, S, nh, hd)
+        v = (jnp.einsum("bsd,dh->bsh", y, lp["wv"]) + lp["bv"]).reshape(B, S, nh, hd)
+        o = attn.attention(q, k, v, causal=False, impl=cfg.attn_impl,
+                           q_chunk=cfg.attn_chunk)
+        h = h + jnp.einsum("bsh,hd->bsd", o.reshape(B, S, d), lp["wo"]) + lp["bo"]
+        y2 = common.layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        z = common.gelu(jnp.einsum("bsd,df->bsf", y2, lp["w_in"]) + lp["b_in"])
+        h = h + jnp.einsum("bsf,fd->bsd", z, lp["w_out"]) + lp["b_out"]
+        return shd.hint(h, "dp", None, None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(lambda h, lp: body_fn(h, lp), x, params["layers"])
+    x = common.layer_norm(x, params["final_ln"]["scale"], params["final_ln"]["bias"])
+    # DeiT averages the cls and distill heads at inference; we use the mean
+    # of the extra tokens as the classifier input for both variants.
+    feat = jnp.mean(x[:, :n_extra], axis=1)
+    logits = jnp.einsum("bd,dc->bc", feat, params["head"]["w"],
+                        preferred_element_type=jnp.float32) + \
+        params["head"]["b"].astype(jnp.float32)
+    return logits
+
+
+def loss_fn(params, batch, cfg: ViTConfig):
+    logits = forward(params, batch["images"], cfg)
+    loss = common.softmax_xent(logits, batch["labels"])
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def make_train_step(cfg: ViTConfig, opt_cfg):
+    from repro.training.optimizer import adamw_update
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(params, grads,
+                                                      opt_state, opt_cfg)
+        return params, opt_state, dict(metrics, **opt_metrics)
+
+    return train_step
+
+
+def serve_step(params, images, cfg: ViTConfig):
+    return forward(params, images, cfg)

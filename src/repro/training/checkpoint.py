@@ -1,0 +1,152 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest, atomic commit.
+
+Layout:
+    <dir>/step_000100/
+        manifest.json        # step, tree structure, shapes/dtypes, host count
+        shard_00000.npz      # this host's param/opt leaves (flattened paths)
+    <dir>/LATEST             # atomic pointer file (written last)
+
+Crash-safety: the step directory is written under a temp name and renamed
+only after every shard and the manifest are fsynced; LATEST is updated via
+write-to-temp + rename.  ``restore_latest`` ignores half-written step dirs,
+so a job killed mid-save resumes from the previous complete checkpoint —
+exercised by tests/test_checkpoint.py with a simulated kill.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
+                    keep_last: int = 3, host_id: int = 0,
+                    extra: Optional[dict] = None) -> Path:
+    base = Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    tmp = base / f".tmp_step_{step:08d}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(tree)
+    shard_path = tmp / f"shard_{host_id:05d}.npz"
+    np.savez(shard_path, **flat)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "n_hosts": jax.process_count(),
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    mpath = tmp / "manifest.json"
+    mpath.write_text(json.dumps(manifest, indent=1))
+    # fsync the directory contents before the atomic rename commit
+    for p in (shard_path, mpath):
+        fd = os.open(p, os.O_RDONLY)
+        os.fsync(fd)
+        os.close(fd)
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+
+    latest_tmp = base / ".LATEST.tmp"
+    latest_tmp.write_text(final.name)
+    latest_tmp.rename(base / "LATEST")
+
+    _gc_old(base, keep_last)
+    return final
+
+
+def _gc_old(base: Path, keep_last: int) -> None:
+    steps = sorted(p for p in base.glob("step_*") if p.is_dir())
+    for p in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+    for p in base.glob(".tmp_step_*"):
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def _valid(step_dir: Path) -> bool:
+    m = step_dir / "manifest.json"
+    if not m.exists():
+        return False
+    try:
+        manifest = json.loads(m.read_text())
+    except json.JSONDecodeError:
+        return False
+    shard = step_dir / "shard_00000.npz"
+    return shard.exists() and "keys" in manifest
+
+
+def list_checkpoints(ckpt_dir: str) -> List[Path]:
+    base = Path(ckpt_dir)
+    if not base.exists():
+        return []
+    return [p for p in sorted(base.glob("step_*")) if _valid(p)]
+
+
+def restore_checkpoint(step_dir: Path, template: PyTree,
+                       host_id: int = 0) -> Tuple[PyTree, dict]:
+    """Restore into the structure/dtypes of ``template`` (sharding applied
+    by the caller via device_put; resharding to a different mesh is just a
+    different device_put — see training/elastic.py)."""
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    data = np.load(step_dir / f"shard_{host_id:05d}.npz")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want_dtype = manifest.get("dtypes", {}).get(key)
+        if want_dtype and str(arr.dtype) != want_dtype:
+            # npz stores extension dtypes (bfloat16, fp8) as raw void bytes;
+            # re-view them using the dtype recorded in the manifest.
+            arr = arr.view(np.dtype(want_dtype))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: checkpoint "
+                             f"{arr.shape} vs template {leaf.shape}")
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+def restore_latest(ckpt_dir: str, template: PyTree,
+                   host_id: int = 0) -> Optional[Tuple[PyTree, dict]]:
+    """Restore the newest complete checkpoint, skipping corrupt ones."""
+    base = Path(ckpt_dir)
+    pointer = base / "LATEST"
+    candidates = list_checkpoints(ckpt_dir)
+    if pointer.exists():
+        named = base / pointer.read_text().strip()
+        if _valid(named):
+            candidates = [c for c in candidates if c != named] + [named]
+    for step_dir in reversed(candidates):
+        try:
+            return restore_checkpoint(step_dir, template, host_id)
+        except (KeyError, ValueError, OSError, json.JSONDecodeError):
+            continue
+    return None

@@ -1,0 +1,64 @@
+"""Gradient compression (beyond-paper distributed-optimization lever).
+
+int8 quantization with per-tensor scale and error feedback [Seide et al.;
+1-bit SGD lineage].  On a pod this shrinks the cross-pod gradient
+all-reduce 4x (fp32) / 2x (bf16); the pod axis is the slow link, so the
+compressed all-reduce pattern is: quantize → psum int32 → dequantize.
+Error feedback keeps the quantization noise from biasing convergence.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda g: quantize_int8(g), grads)
+
+
+def decompress_tree(cgrads: PyTree, like: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda qs, g: dequantize_int8(qs[0], qs[1], g.dtype),
+        cgrads, like, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and hasattr(x[0], "dtype"))
+
+
+def roundtrip_with_feedback(grads: PyTree, residual: Optional[PyTree]
+                            ) -> Tuple[PyTree, PyTree]:
+    """Quantize+dequantize with error feedback; returns (grads', residual').
+
+    In a multi-pod run the quantized tensors are what cross the pod axis;
+    this helper is the numerics (tested for contraction of the feedback
+    loop in tests/test_training.py).
+    """
+    if residual is None:
+        residual = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        total = g.astype(jnp.float32) + r
+        q, s = quantize_int8(total)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), total - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,60 @@
+"""Elastic scaling / failure recovery: remesh parameters across device
+counts.
+
+On a real cluster the control plane detects a lost host, restarts the job
+with the surviving N' devices, and this module rebuilds the mesh and
+re-places the checkpointed state under the new sharding — data parallelism
+shrinks, tensor parallelism is preserved when the model axis still fits.
+On this container we exercise the same code path across different virtual
+device splits (tests/test_training.py::TestElastic).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def surviving_mesh(n_devices: int, model_parallel: int) -> Mesh:
+    """Largest (data, model) mesh that fits ``n_devices`` devices."""
+    mp = model_parallel
+    while mp > 1 and (n_devices % mp != 0 or mp > n_devices):
+        mp //= 2
+    dp = n_devices // mp
+    devices = np.array(jax.devices()[:dp * mp]).reshape(dp, mp)
+    return Mesh(devices, ("data", "model"),
+                axis_types=(AxisType.Auto,) * 2)
+
+
+def replace_mesh(tree: PyTree, spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    """Re-place a host-resident pytree onto a (new) mesh.
+
+    ``spec_tree`` holds PartitionSpecs aligned with ``tree`` (tuples of
+    axis names or P objects).  Axes that do not divide are replicated.
+    """
+    def leaf(x, spec):
+        if not isinstance(spec, P):
+            spec = P(*spec) if isinstance(spec, tuple) else P()
+        fixed = []
+        for dim, axes in zip(x.shape, tuple(spec) + (None,) * x.ndim):
+            if axes is None:
+                fixed.append(None)
+                continue
+            size = mesh.shape[axes] if isinstance(axes, str) else \
+                int(np.prod([mesh.shape[a] for a in axes]))
+            fixed.append(axes if dim % size == 0 else None)
+        return jax.device_put(x, NamedSharding(mesh, P(*fixed)))
+
+    return jax.tree_util.tree_map(
+        leaf, tree, spec_tree,
+        is_leaf=lambda s: isinstance(s, (tuple, P)) and not isinstance(s, dict))
+
+
+def shrink_batch(global_batch: int, old_dp: int, new_dp: int) -> int:
+    """Keep per-device batch constant when data parallelism shrinks."""
+    per_dev = max(1, global_batch // old_dp)
+    return per_dev * new_dp

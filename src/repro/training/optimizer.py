@@ -1,0 +1,115 @@
+"""AdamW + schedules as pure pytree transforms (no optax dependency).
+
+The optimizer state dtype is configurable (``float32`` default; ``bfloat16``
+for trillion-parameter configs where fp32 moments cannot fit HBM — see
+DESIGN.md §5 / EXPERIMENTS.md §Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32
+    schedule: str = "cosine"          # cosine | constant | linear_warmup
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray                 # scalar int32
+    m: PyTree
+    v: PyTree
+
+
+def init_opt_state(params: PyTree, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def opt_state_specs(param_specs: PyTree, cfg: AdamWConfig) -> OptState:
+    """ShapeDtypeStruct mirror of ``init_opt_state`` for the dry-run."""
+    spec = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.state_dtype)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree_util.tree_map(spec, param_specs),
+        v=jax.tree_util.tree_map(spec, param_specs),
+    )
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step_f + 1.0) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    frac = jnp.clip((step_f - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    if cfg.schedule == "linear_warmup":
+        return cfg.lr * warm * (1.0 - frac)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jnp.ndarray]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: OptState,
+                 cfg: AdamWConfig) -> Tuple[PyTree, OptState, dict]:
+    """One AdamW step. Math in fp32; moments stored in ``cfg.state_dtype``."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule_lr(cfg, state.step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return (newp.astype(p.dtype), m32.astype(cfg.state_dtype),
+                v32.astype(cfg.state_dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(step=step, m=new_m, v=new_v), metrics

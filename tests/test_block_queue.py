@@ -1,0 +1,267 @@
+"""Unit + property tests for the preferential queue (Algorithms 1-5)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.block_queue import FastPreferentialQueue, PreferentialQueue
+from repro.core.queues import EDFQueue, FIFOQueue
+from repro.core.request import Request, Service
+
+
+def mkreq(p, D, arrival=0.0):
+    svc = Service(f"p{p}d{D}", pixels=1, environment="busy", proc_time=p, deadline=D)
+    return Request(service=svc, arrival_time=arrival, origin_node=0)
+
+
+# ---------------------------------------------------------------------------
+# Paper scenarios (Figs. 1-3 semantics)
+# ---------------------------------------------------------------------------
+class TestBasicSemantics:
+    def test_empty_queue_right_aligned_at_deadline(self):
+        q = PreferentialQueue()
+        assert q.push(mkreq(20, 100), cpu_free_time=0.0)
+        (b,) = q.blocks
+        assert b.start == pytest.approx(80.0)
+        assert b.end == pytest.approx(100.0)
+
+    def test_reject_infeasible_deadline(self):
+        q = PreferentialQueue()
+        assert not q.push(mkreq(50, 30), cpu_free_time=0.0)     # p > D
+        assert not q.push(mkreq(10, 5), cpu_free_time=0.0)
+        assert len(q) == 0
+
+    def test_tight_request_cuts_in_front(self):
+        """Fig. 1: a new tight-deadline request is allocated before an
+        already-queued longer-deadline one without disturbing it."""
+        q = PreferentialQueue()
+        assert q.push(mkreq(180, 9000), 0.0)                     # [8820, 9000]
+        assert q.push(mkreq(20, 100), 0.0)                       # fits in front
+        starts = [b.start for b in q.blocks]
+        assert starts == sorted(starts)
+        assert q.blocks[0].request.proc_time == 20
+        assert q.blocks[0].end <= 100
+        assert q.blocks[1].end <= 9000
+        q.check_invariants(0.0)
+
+    def test_gap_accumulation_with_shift(self):
+        """Fig. 2c-d: deficit covered by left-shifting earlier blocks."""
+        q = PreferentialQueue()
+        assert q.push(mkreq(10, 100), 0.0)      # [90, 100]
+        assert q.push(mkreq(10, 50), 0.0)       # [40, 50]
+        # window between the two blocks is [50, 90]; request needing 60 UT with
+        # deadline 90 only fits if the d=50 block shifts left into its slack.
+        assert q.push(mkreq(60, 90), 0.0)
+        q.check_invariants(0.0)
+        assert q.deadlines_respected()
+        ends = [b.end for b in q.blocks]
+        assert ends == sorted(ends)
+
+    def test_existing_deadlines_never_disturbed(self):
+        q = PreferentialQueue()
+        reqs = [mkreq(44, 9000), mkreq(20, 4000), mkreq(180, 9000), mkreq(20, 300)]
+        admitted = [r for r in reqs if q.push(r, 0.0)]
+        q.check_invariants(0.0)
+        assert q.deadlines_respected()
+        assert len(admitted) == len(q)
+
+    def test_forced_push_appends_late(self):
+        """Fig. 3 worst case: forced push processes the request late but does
+        not disturb admitted deadlines."""
+        q = PreferentialQueue()
+        for _ in range(10):
+            q.push(mkreq(100, 1000), 0.0)
+        assert not q.push(mkreq(500, 400), 0.0)                  # infeasible
+        assert q.push(mkreq(500, 400), 0.0, forced=True)         # forced
+        q.check_invariants(0.0)
+        late = [b for b in q.blocks if b.end > b.request.deadline + 1e-9]
+        assert len(late) == 1
+        assert late[0].request.proc_time == 500
+        assert late[0] is q.blocks[-1]
+
+    def test_forced_compaction_variant(self):
+        q = PreferentialQueue(forced_compaction=True)
+        q.push(mkreq(10, 1000), 0.0)     # [990, 1000]
+        q.push(mkreq(10, 500), 0.0)      # [490, 500]
+        assert not q.push(mkreq(2000, 100), 0.0)
+        assert q.push(mkreq(2000, 100), 0.0, forced=True)
+        # literal reading: everything compacted left before the append
+        assert q.blocks[0].start == pytest.approx(0.0)
+        assert q.blocks[1].start == pytest.approx(q.blocks[0].end)
+        assert q.blocks[2].start == pytest.approx(q.blocks[1].end)
+
+    def test_pop_order_is_time_order(self):
+        q = PreferentialQueue()
+        q.push(mkreq(180, 9000), 0.0)
+        q.push(mkreq(20, 100), 0.0)
+        q.push(mkreq(44, 4000), 0.0)
+        sizes = []
+        while True:
+            r = q.pop()
+            if r is None:
+                break
+            sizes.append(r.proc_time)
+        assert sizes == [20, 44, 180]
+
+    def test_respects_cpu_free_time(self):
+        q = PreferentialQueue()
+        # CPU busy until t=90; a request with deadline 100 and p=20 cannot fit.
+        assert not q.push(mkreq(20, 100), cpu_free_time=90.0)
+        assert q.push(mkreq(10, 100), cpu_free_time=90.0)
+        assert q.blocks[0].start >= 90.0
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+request_strategy = st.tuples(
+    st.sampled_from([5.0, 20.0, 44.0, 180.0]),            # proc time
+    st.sampled_from([50.0, 400.0, 4000.0, 9000.0]),       # relative deadline
+    st.floats(min_value=0.0, max_value=500.0),            # inter-arrival
+    st.booleans(),                                        # forced
+)
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.lists(request_strategy, min_size=1, max_size=60), st.integers(0, 2**32 - 1))
+def test_fast_and_faithful_queues_identical(ops, seed):
+    """The O(log n) queue is observationally identical to the O(n) one."""
+    q1, q2 = PreferentialQueue(), FastPreferentialQueue()
+    t = 0.0
+    cpu_free = 0.0
+    pop_trigger = seed
+    for i, (p, D, dt, forced) in enumerate(ops):
+        t += dt
+        cpu_free = max(cpu_free, t)
+        r1 = mkreq(p, D, arrival=t)
+        r2 = Request(service=r1.service, arrival_time=t, origin_node=0)
+        ok1 = q1.push(r1, cpu_free, forced)
+        ok2 = q2.push(r2, cpu_free, forced)
+        assert ok1 == ok2
+        lay1 = [(round(b.start, 6), round(b.end, 6)) for b in q1.blocks]
+        lay2 = [(round(b.start, 6), round(b.end, 6)) for b in q2.blocks]
+        assert lay1 == lay2
+        q1.check_invariants()
+        q2.check_invariants()
+        pop_trigger = (pop_trigger * 1103515245 + 12345) % (2**31)
+        if pop_trigger % 3 == 0:
+            a = q1.pop()
+            q2.pop()
+            if a is not None:
+                cpu_free = max(cpu_free, t) + a.proc_time
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.lists(request_strategy, min_size=1, max_size=60))
+def test_admitted_requests_always_meet_deadlines(ops):
+    """System invariant: a non-forced admitted request NEVER misses its
+    deadline under the work-conserving executor (DESIGN.md §2 guarantee)."""
+    q = FastPreferentialQueue()
+    t = 0.0
+    busy_until = 0.0
+    admitted_normal = []
+    pending = []
+    events = []
+    for (p, D, dt, forced) in ops:
+        t += dt
+        # drain completions before t (work conserving executor)
+        while True:
+            free_at = busy_until
+            if free_at > t or len(q) == 0:
+                break
+            r = q.pop()
+            comp = max(free_at, 0.0) + r.proc_time
+            busy_until = comp
+            events.append((r, comp))
+        cpu_free = max(t, busy_until)
+        r = mkreq(p, D, arrival=t)
+        ok = q.push(r, cpu_free, forced)
+        if ok and not forced:
+            admitted_normal.append(r)
+        q.check_invariants()
+    # drain the rest
+    while len(q) > 0:
+        r = q.pop()
+        comp = max(busy_until, 0.0) + r.proc_time
+        busy_until = comp
+        events.append((r, comp))
+    comp_by_rid = {r.rid: c for r, c in events}
+    for r in admitted_normal:
+        assert comp_by_rid[r.rid] <= r.deadline + 1e-6, \
+            f"admitted request missed deadline: {r.rid}"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(request_strategy, min_size=1, max_size=50))
+def test_preferential_admits_superset_of_fifo_per_state(ops):
+    """Per-push (same incoming request, same cpu_free): whenever FIFO's
+    admission test passes on the preferential queue's *work content*, the
+    preferential queue also admits (tail position is always an option)."""
+    q = FastPreferentialQueue()
+    t = 0.0
+    for (p, D, dt, forced) in ops:
+        t += dt
+        r = mkreq(p, D, arrival=t)
+        fifo_would = t + q.pending_work() + p <= r.deadline + 1e-9
+        ok = q.push(r, t, forced=False)
+        if fifo_would:
+            assert ok, "preferential rejected a FIFO-admissible request"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(request_strategy, min_size=1, max_size=40))
+def test_blocks_sorted_nonoverlapping(ops):
+    q = FastPreferentialQueue()
+    t = 0.0
+    for (p, D, dt, forced) in ops:
+        t += dt
+        q.push(mkreq(p, D, arrival=t), t, forced)
+        blocks = q.blocks
+        for a, b in zip(blocks, blocks[1:]):
+            assert a.end <= b.start + 1e-6
+        assert q.pending_work() == pytest.approx(sum(b.size for b in blocks))
+
+
+# ---------------------------------------------------------------------------
+# Baseline queues
+# ---------------------------------------------------------------------------
+class TestFIFO:
+    def test_admission(self):
+        q = FIFOQueue()
+        assert q.push(mkreq(20, 100), 0.0)
+        assert q.push(mkreq(20, 100), 0.0)
+        # 40 UT queued; completion would be 60 > 55
+        assert not q.push(mkreq(20, 55), 0.0)
+        assert q.push(mkreq(20, 55), 0.0, forced=True)
+        assert len(q) == 3
+
+    def test_order(self):
+        q = FIFOQueue()
+        q.push(mkreq(20, 9000), 0.0)
+        q.push(mkreq(180, 9000), 0.0)
+        q.push(mkreq(44, 9000), 0.0)
+        assert [q.pop().proc_time for _ in range(3)] == [20, 180, 44]
+
+
+class TestEDF:
+    def test_sorted_by_deadline(self):
+        q = EDFQueue()
+        q.push(mkreq(10, 9000), 0.0)
+        q.push(mkreq(10, 50), 0.0)
+        q.push(mkreq(10, 4000), 0.0)
+        assert [q.pop().deadline for _ in range(3)] == [50.0, 4000.0, 9000.0]
+
+    def test_admission_protects_existing(self):
+        q = EDFQueue()
+        assert q.push(mkreq(40, 50), 0.0)
+        # would preempt and push the first past its deadline
+        assert not q.push(mkreq(40, 45), 0.0)
+        assert len(q) == 1
+
+    def test_forced_overflow_runs_after_main(self):
+        q = EDFQueue()
+        q.push(mkreq(40, 50), 0.0)
+        assert q.push(mkreq(100, 10), 0.0, forced=True)
+        q.push(mkreq(5, 49), 0.0)
+        out = [q.pop().proc_time for _ in range(3)]
+        assert out == [5, 40, 100]

@@ -1,0 +1,100 @@
+"""The JAX-native ledger (core/jax_queue.py) is property-tested against the
+host preferential queue: identical admission decisions and block layouts
+over random request streams."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import jax_queue as jq
+from repro.core.block_queue import FastPreferentialQueue
+from repro.core.request import Request, Service
+
+
+def mkreq(p, D, arrival=0.0):
+    svc = Service(f"p{p}d{D}", 1, "x", p, D)
+    return Request(service=svc, arrival_time=arrival, origin_node=0)
+
+
+# times quantized to halves so the f32 ledger and the f64 host queue see
+# bit-identical boundaries (epsilon-scale deadline ties are undefined
+# behavior across precisions, not an algorithmic property)
+stream = st.lists(
+    st.tuples(st.sampled_from([5.0, 20.0, 44.0, 180.0]),
+              st.sampled_from([50.0, 400.0, 4000.0, 9000.0]),
+              st.integers(0, 600).map(lambda i: i / 2.0)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=150, deadline=None)
+@given(stream, st.integers(0, 2**31 - 1))
+def test_matches_host_queue(ops, seed):
+    host = FastPreferentialQueue()
+    led = jq.empty_ledger(64)
+    t, cpu_free = 0.0, 0.0
+    rngstate = seed
+    for (p, D, dt) in ops:
+        t += dt
+        cpu_free = max(cpu_free, t)
+        r = mkreq(p, D, arrival=t)
+        ok_host = host.push(r, cpu_free)
+        led, ok_jax = jq.push(led, jnp.float32(p), jnp.float32(r.deadline),
+                              jnp.float32(cpu_free))
+        assert bool(ok_jax) == ok_host, (p, D, t)
+        n = int(led.n)
+        assert n == len(host)
+        if n:
+            np.testing.assert_allclose(
+                np.asarray(led.starts[:n]),
+                [b.start for b in host.blocks], rtol=1e-5, atol=1e-3)
+            np.testing.assert_allclose(
+                np.asarray(led.ends[:n]),
+                [b.end for b in host.blocks], rtol=1e-5, atol=1e-3)
+        rngstate = (rngstate * 1103515245 + 12345) % (2**31)
+        if rngstate % 3 == 0:
+            popped = host.pop()
+            led, size = jq.pop(led)
+            if popped is not None:
+                cpu_free = max(cpu_free, t) + popped.proc_time
+                assert float(size) == pytest.approx(popped.proc_time)
+
+
+def test_feasible_batch_matches_scalar():
+    led = jq.empty_ledger(16)
+    for (p, d) in ((20.0, 100.0), (44.0, 400.0), (180.0, 9000.0)):
+        led, _ = jq.push(led, jnp.float32(p), jnp.float32(d), jnp.float32(0.0))
+    ps = jnp.array([5.0, 20.0, 180.0, 500.0], jnp.float32)
+    ds = jnp.array([30.0, 60.0, 300.0, 200.0], jnp.float32)
+    batch = jq.feasible_batch(led, ps, ds, jnp.float32(0.0))
+    singles = [bool(jq.feasible(led, ps[i], ds[i], jnp.float32(0.0)))
+               for i in range(4)]
+    assert list(np.asarray(batch)) == singles
+
+
+def test_batched_replica_scoring_under_vmap():
+    """The engine's use case: score K requests against R replica ledgers in
+    one call — vmap over ledgers of vmap over requests."""
+    R, K = 3, 5
+    leds = [jq.empty_ledger(8) for _ in range(R)]
+    leds[0], _ = jq.push(leds[0], jnp.float32(180.0), jnp.float32(200.0),
+                         jnp.float32(0.0))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *leds)
+    ps = jnp.full((K,), 44.0, jnp.float32)
+    ds = jnp.linspace(50.0, 9000.0, K).astype(jnp.float32)
+    score = jax.vmap(lambda led: jq.feasible_batch(led, ps, ds,
+                                                   jnp.float32(0.0)))(stacked)
+    assert score.shape == (R, K)
+    # replica 0 is busy until 200; the tightest request fits only elsewhere
+    assert not bool(score[0, 0]) and bool(score[1, 0])
+
+
+def test_capacity_limit():
+    led = jq.empty_ledger(2)
+    for _ in range(2):
+        led, ok = jq.push(led, jnp.float32(1.0), jnp.float32(9000.0),
+                          jnp.float32(0.0))
+        assert bool(ok)
+    led, ok = jq.push(led, jnp.float32(1.0), jnp.float32(9000.0),
+                      jnp.float32(0.0))
+    assert not bool(ok)

@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train step on CPU, asserting output shapes and no NaNs (assignment §f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config, shapes_for
+from repro.configs.shapes import ShapeSpec
+from repro.launch.steps import build_cell, model_module
+from repro.models import transformer
+from repro.models.common import check_finite, count_params
+
+
+def small_shape(cfg, kind: str) -> ShapeSpec:
+    if cfg.family == "lm":
+        return ShapeSpec("smoke", kind, seq_len=16, global_batch=2)
+    if cfg.family in ("vit", "resnet"):
+        return ShapeSpec("smoke", kind, img_res=cfg.img_res, global_batch=2)
+    return ShapeSpec("smoke", kind, img_res=getattr(cfg, "img_res", 64),
+                     global_batch=2, steps=2)
+
+
+def _cell_for(arch, kind):
+    cfg = get_smoke_config(arch)
+    shape = small_shape(cfg, kind)
+    # build_cell reads shapes_for; construct manually for smoke shapes
+    from repro.launch import steps as S
+    cells = S.shapes_for(cfg)
+    cells[shape.name] = shape
+    try:
+        return S.build_cell(arch, "smoke", cfg=cfg)
+    finally:
+        cells.pop("smoke", None)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cell = _cell_for(arch, "train")
+    args = cell.make_args(jax.random.PRNGKey(0))
+    params, opt_state, batch = args
+    n = count_params(params)
+    assert n > 1000
+    step = jax.jit(cell.step_fn)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert jnp.isfinite(metrics["loss"]), f"{arch} loss is not finite"
+    assert bool(check_finite(new_params)), f"{arch} produced non-finite params"
+    assert new_opt.step == 1
+    # shapes preserved
+    jax.tree_util.tree_map(lambda a, b: None if a.shape == b.shape else
+                           pytest.fail(f"shape changed {a.shape}->{b.shape}"),
+                           params, new_params)
+    # gradients flow and a few more steps stay finite
+    assert float(metrics["grad_norm"]) > 0, f"{arch}: zero gradients"
+    p, o = new_params, new_opt
+    for _ in range(3):
+        p, o, metrics = step(p, o, batch)
+    assert jnp.isfinite(metrics["loss"]), f"{arch}: loss diverged"
+    assert bool(check_finite(p)), f"{arch}: params diverged"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    kind = "decode" if cfg.family == "lm" else "serve"
+    cell = _cell_for(arch, kind)
+    args = cell.make_args(jax.random.PRNGKey(1))
+    out = jax.jit(cell.step_fn)(*args)
+    leaves = jax.tree_util.tree_leaves(out)
+    assert leaves
+    assert bool(check_finite(leaves)), f"{arch} serve produced non-finite"
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "gemma3-27b",
+                                  "starcoder2-7b", "granite-moe-3b-a800m"])
+def test_lm_prefill_decode_consistency(arch):
+    """Prefill + decode agree with the plain forward pass on next-token
+    logits — the KV-cache path is numerically equivalent."""
+    cfg = get_smoke_config(arch)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                cfg.vocab_size)
+    full_logits = transformer.logits_fn(params, tokens, cfg)
+
+    last, cache = transformer.prefill(params, tokens[:, :-1], cfg, max_len=S + 4)
+    assert jnp.allclose(last, full_logits[:, -2], atol=2e-2), \
+        "prefill last-token logits diverge from forward"
+
+    sliding = cfg.sliding_window is not None and cfg.global_every > 0
+    if sliding:
+        # rebuild a sliding cache by decoding from scratch
+        cache_s = transformer.init_sliding_cache(cfg, B, S + 4)
+        logits = None
+        for i in range(S):
+            logits, cache_s = transformer.decode_step_sliding(
+                params, cache_s, tokens[:, i], cfg)
+        assert jnp.allclose(logits, full_logits[:, -1], atol=2e-2), \
+            "sliding decode diverges from forward"
+    else:
+        logits, cache = transformer.decode_step(params, cache,
+                                                tokens[:, -1], cfg)
+        assert jnp.allclose(logits, full_logits[:, -1], atol=2e-2), \
+            "decode logits diverge from forward"
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact published numbers."""
+    k = get_config("kimi-k2-1t-a32b")
+    assert (k.n_layers, k.d_model, k.n_heads, k.n_kv_heads) == (61, 7168, 64, 8)
+    assert (k.d_ff, k.vocab_size, k.n_experts, k.top_k) == (2048, 163840, 384, 8)
+    assert k.total_params() > 9e11, "kimi should be ~1T total params"
+    assert k.active_params() < 4e10, "kimi should be ~32B active params"
+
+    g = get_config("granite-moe-3b-a800m")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads) == (32, 1536, 24, 8)
+    assert (g.d_ff, g.n_experts, g.top_k, g.vocab_size) == (512, 40, 8, 49155)
+
+    s = get_config("starcoder2-7b")
+    assert (s.n_layers, s.d_model, s.n_heads, s.n_kv_heads) == (32, 4608, 36, 4)
+    assert (s.d_ff, s.vocab_size) == (18432, 49152)
+
+    m = get_config("gemma3-27b")
+    assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads) == (62, 5376, 32, 16)
+    assert (m.d_ff, m.vocab_size) == (21504, 262144)
+    assert m.sliding_window == 1024 and m.global_every == 6
+
+    d = get_config("dit-xl2")
+    assert (d.img_res, d.patch, d.n_layers, d.d_model, d.n_heads) == \
+        (256, 2, 28, 1152, 16)
+
+    u = get_config("unet-sd15")
+    assert (u.img_res, u.latent_res, u.ch, u.ch_mult) == (512, 64, 320, (1, 2, 4, 4))
+
+    v = get_config("vit-l16")
+    assert (v.n_layers, v.d_model, v.n_heads, v.d_ff, v.patch) == \
+        (24, 1024, 16, 4096, 16)
+    assert abs(v.total_params() - 304e6) < 30e6
+
+    h = get_config("vit-h14")
+    assert (h.n_layers, h.d_model, h.n_heads, h.d_ff, h.patch) == \
+        (32, 1280, 16, 5120, 14)
+
+    de = get_config("deit-b")
+    assert (de.n_layers, de.d_model, de.n_heads, de.d_ff) == (12, 768, 12, 3072)
+    assert de.distill_token
+
+    r = get_config("resnet-50")
+    assert r.depths == (3, 4, 6, 3) and r.width == 64

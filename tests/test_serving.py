@@ -1,0 +1,158 @@
+"""Serving engine tests: deadline-aware admission + batching over a real
+JAX model, KV-cache session pool."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.queues import FIFOQueue
+from repro.models import vit
+from repro.serving.engine import (DeadlineAwareEngine, ServeRequest,
+                                  ServiceClass, ServingReplica)
+from repro.serving.kv_cache import KVCachePool
+
+
+def const_runner(outputs=None):
+    calls = []
+
+    def run_batch(cls_name, payloads):
+        calls.append((cls_name, len(payloads)))
+        return [f"{cls_name}:{i}" for i in range(len(payloads))]
+
+    run_batch.calls = calls
+    return run_batch
+
+
+def mkcls(name="hd", res=720, deadline=100.0, proc=10.0):
+    return ServiceClass(name, res, deadline, proc)
+
+
+class TestReplica:
+    def test_admit_and_serve_in_deadline(self):
+        rb = const_runner()
+        rep = ServingReplica(0, rb)
+        cls = mkcls()
+        req = ServeRequest("img", cls, arrival=0.0, rid=0)
+        assert rep.try_admit(req, now=0.0, forced=False)
+        done, served = rep.step(0.0)
+        assert served and served[0].done_at <= served[0].deadline
+        assert rep.stats["met"] == 1
+
+    def test_batching_groups_same_class(self):
+        rb = const_runner()
+        cls = mkcls(proc=10.0)
+        cls.batch_proc_time = {1: 10.0, 2: 12.0, 4: 16.0}
+        rep = ServingReplica(0, rb, max_batch=4)
+        for i in range(4):
+            assert rep.try_admit(ServeRequest("x", cls, 0.0, rid=i), 0.0, False)
+        done, served = rep.step(0.0)
+        assert len(served) == 4
+        assert rb.calls == [("hd", 4)]
+        assert done == pytest.approx(16.0)     # batched, not 40.0 sequential
+
+    def test_batch_run_stops_at_class_boundary(self):
+        # Equal-deadline requests stack leftward in the preferential queue
+        # (each right-aligns at the previous block's start — the paper's
+        # Alg. 2 semantics), so queue order here is b, a, a.
+        rb = const_runner()
+        a, b = mkcls("a", deadline=1000.0), mkcls("b", deadline=1000.0)
+        rep = ServingReplica(0, rb, max_batch=8)
+        rep.try_admit(ServeRequest("x", a, 0.0, rid=0), 0.0, False)
+        rep.try_admit(ServeRequest("x", a, 0.0, rid=1), 0.0, False)
+        rep.try_admit(ServeRequest("x", b, 0.0, rid=2), 0.0, False)
+        _, served = rep.step(0.0)
+        assert [r.cls.name for r in served] == ["b"]
+        _, served = rep.step(rep.busy_until)
+        assert [r.cls.name for r in served] == ["a", "a"]
+
+    def test_rejects_infeasible(self):
+        rep = ServingReplica(0, const_runner())
+        cls = mkcls(deadline=5.0, proc=10.0)     # can never make it
+        assert not rep.try_admit(ServeRequest("x", cls, 0.0, rid=0), 0.0, False)
+        assert rep.stats["rejected"] == 1
+
+    def test_works_with_fifo_queue(self):
+        rep = ServingReplica(0, const_runner(), queue=FIFOQueue())
+        cls = mkcls()
+        assert rep.try_admit(ServeRequest("x", cls, 0.0, rid=0), 0.0, False)
+        _, served = rep.step(0.0)
+        assert len(served) == 1
+
+
+class TestEngine:
+    def test_forwarding_to_free_replica(self):
+        rb = const_runner()
+        cls = mkcls(deadline=25.0, proc=10.0)
+        reps = [ServingReplica(i, rb, max_batch=1) for i in range(2)]
+        eng = DeadlineAwareEngine(reps, max_forwards=2)
+        # overload replica 0 so the 3rd submit must forward
+        for _ in range(3):
+            eng.submit("x", cls, now=0.0, origin=0)
+        assert eng.forwards >= 1
+        eng.drain(0.0)
+        stats = eng.stats()
+        assert stats["met"] == 3
+
+    def test_forced_after_max_forwards(self):
+        rb = const_runner()
+        cls = mkcls(deadline=10.0, proc=10.0)
+        reps = [ServingReplica(i, rb, max_batch=1) for i in range(2)]
+        eng = DeadlineAwareEngine(reps, max_forwards=2)
+        for _ in range(6):
+            eng.submit("x", cls, now=0.0, origin=0)
+        eng.drain(0.0)
+        stats = eng.stats()
+        assert stats["admitted"] == 6            # nothing is dropped
+        assert stats["forced"] >= 1              # some ran late (forced)
+        assert stats["met"] + stats["missed"] == 6
+
+    def test_end_to_end_with_real_model(self):
+        """The paper's use case with an actual ViT data plane on CPU."""
+        cfg = get_smoke_config("deit-b")
+        params = vit.init_params(cfg, jax.random.PRNGKey(0))
+        fwd = jax.jit(lambda imgs: vit.forward(params, imgs, cfg))
+
+        def run_batch(cls_name, payloads):
+            logits = fwd(jnp.stack(payloads))
+            return list(np.asarray(jnp.argmax(logits, -1)))
+
+        img = jnp.ones((cfg.img_res, cfg.img_res, 3), jnp.float32)
+        cls = ServiceClass("hd", cfg.img_res, deadline=60.0, proc_time=5.0)
+        cls.batch_proc_time = {1: 5.0, 2: 6.0, 4: 8.0, 8: 12.0}
+        reps = [ServingReplica(i, run_batch, max_batch=8) for i in range(2)]
+        eng = DeadlineAwareEngine(reps)
+        reqs = [eng.submit(img, cls, now=float(i) * 0.5) for i in range(12)]
+        eng.drain(6.0)
+        assert all(r.result is not None for r in reqs)
+        stats = eng.stats()
+        assert stats["met"] + stats["missed"] == 12
+        assert stats["met"] >= 10
+
+
+class TestKVCachePool:
+    def test_allocate_release(self):
+        pool = KVCachePool(n_slots=2, max_len=16)
+        a = pool.allocate()
+        b = pool.allocate()
+        assert pool.allocate() is None          # exhausted
+        pool.release(a.session_id)
+        c = pool.allocate()
+        assert c.slot == a.slot                  # slot recycled
+
+    def test_advance_and_overflow(self):
+        pool = KVCachePool(n_slots=1, max_len=4)
+        s = pool.allocate()
+        for _ in range(4):
+            pool.advance(s.session_id)
+        with pytest.raises(ValueError):
+            pool.advance(s.session_id)
+
+    def test_deadline_eviction(self):
+        pool = KVCachePool(n_slots=2, max_len=16)
+        a = pool.allocate(deadline=10.0)
+        b = pool.allocate(deadline=100.0)
+        dead = pool.evict_expired(now=50.0)
+        assert dead == [a.session_id]
+        assert pool.active == 1
+        assert pool.utilization() == 0.5

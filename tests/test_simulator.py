@@ -1,0 +1,121 @@
+"""Integration tests: the MEC-LB simulator reproduces the paper's claims."""
+import pytest
+
+from repro.core.request import SERVICES
+from repro.core.scenarios import SCENARIOS, generate_requests, total_requests
+from repro.core.simulator import SimConfig, run_experiment, run_simulation
+
+
+class TestScenarioData:
+    def test_table1_services(self):
+        assert SERVICES["S1"].proc_time == 180 and SERVICES["S1"].deadline == 9000
+        assert SERVICES["S4"].proc_time == 180 and SERVICES["S4"].deadline == 4000
+        assert SERVICES["S3"].proc_time == 20 and SERVICES["S6"].proc_time == 20
+        # proc time proportional to pixels (paper: "proportional to the
+        # number of pixels of each resolution")
+        r1 = SERVICES["S1"].pixels / SERVICES["S3"].pixels
+        r2 = SERVICES["S1"].proc_time / SERVICES["S3"].proc_time
+        assert r1 == pytest.approx(r2, rel=0.01)
+
+    def test_table2_totals(self):
+        # paper: 6000 / 8000 / 9800 requests
+        assert total_requests(1) == 6000
+        assert total_requests(2) == 8000
+        assert total_requests(3) == 9800
+        assert len(SCENARIOS[1]) == 3 and len(SCENARIOS[3]) == 6
+
+    def test_request_generation_deterministic(self):
+        a = generate_requests(1, seed=7)
+        b = generate_requests(1, seed=7)
+        assert [(r.arrival_time, r.service.name, r.origin_node) for r in a] == \
+               [(r.arrival_time, r.service.name, r.origin_node) for r in b]
+        c = generate_requests(1, seed=8)
+        assert [(r.arrival_time) for r in a] != [(r.arrival_time) for r in c]
+
+
+class TestSimulation:
+    def test_all_requests_processed_no_discard(self):
+        """Paper uses the non-discarding SFA variant: everything completes."""
+        res = run_simulation(SimConfig(scenario=1, queue="fifo", seed=0))
+        assert res.processed == res.total_requests == 6000
+        assert res.discarded == 0
+
+    def test_discard_variant(self):
+        res = run_simulation(SimConfig(scenario=1, queue="fifo", seed=0,
+                                       discard_on_exhaust=True))
+        assert res.discarded > 0
+        assert res.processed + res.discarded == res.total_requests
+
+    def test_forward_cap_respected(self):
+        res = run_simulation(SimConfig(scenario=1, queue="fifo", seed=0))
+        assert res.forwards <= res.total_requests * 2
+
+    @pytest.mark.parametrize("scenario", [1, 2, 3])
+    def test_preferential_beats_fifo(self, scenario):
+        """The paper's headline claim (Figs. 5-6): preferential >= FIFO on
+        deadline compliance AND on referrals, in every scenario."""
+        fifo = run_experiment(scenario, "fifo", n_seeds=5)
+        pref = run_experiment(scenario, "preferential", n_seeds=5)
+        assert pref.met_rate_mean >= fifo.met_rate_mean - 0.001
+        assert pref.forward_rate_mean <= fifo.forward_rate_mean + 0.001
+
+    def test_scenario1_overload_regime(self):
+        """Paper: scenario 1 success rate below 20% for both queues."""
+        fifo = run_experiment(1, "fifo", n_seeds=5)
+        pref = run_experiment(1, "preferential", n_seeds=5)
+        assert fifo.met_rate_mean < 0.20
+        assert pref.met_rate_mean < 0.20
+
+    def test_scenario3_nearly_equal(self):
+        """Paper: with 6 nodes the two queues are nearly identical (+0.01%)."""
+        fifo = run_experiment(3, "fifo", n_seeds=5)
+        pref = run_experiment(3, "preferential", n_seeds=5)
+        assert abs(pref.met_rate_mean - fifo.met_rate_mean) < 0.01
+
+    def test_deterministic_given_seed(self):
+        a = run_simulation(SimConfig(scenario=2, queue="preferential", seed=3))
+        b = run_simulation(SimConfig(scenario=2, queue="preferential", seed=3))
+        assert a.met_deadline == b.met_deadline
+        assert a.forwards == b.forwards
+
+    def test_faithful_and_fast_queue_same_results(self):
+        a = run_simulation(SimConfig(scenario=1, queue="preferential", seed=1))
+        b = run_simulation(SimConfig(scenario=1, queue="preferential_faithful", seed=1))
+        assert a.met_deadline == b.met_deadline
+        assert a.forwards == b.forwards
+
+    def test_admitted_nonforced_never_miss(self):
+        """End-to-end invariant check inside the full simulator."""
+        from repro.core.node import MECNode
+        admitted = []
+        orig = MECNode.try_admit
+
+        def spy(self, request, now, forced):
+            ok = orig(self, request, now, forced)
+            if ok and not forced:
+                admitted.append(request)
+            return ok
+
+        MECNode.try_admit = spy
+        try:
+            run_simulation(SimConfig(scenario=1, queue="preferential", seed=0))
+        finally:
+            MECNode.try_admit = orig
+        assert admitted, "no requests admitted?"
+        assert all(r.met_deadline for r in admitted)
+
+
+class TestForwardPolicies:
+    @pytest.mark.parametrize("policy", ["random", "power_of_two",
+                                        "least_loaded", "round_robin"])
+    def test_policies_run(self, policy):
+        res = run_simulation(SimConfig(scenario=1, queue="preferential",
+                                       forward_policy=policy, seed=0))
+        assert res.processed == res.total_requests
+
+    def test_power_of_two_beats_random(self):
+        """Beyond-paper: po2 forwarding reduces missed deadlines vs random
+        neighbor choice (classic load-balancing result)."""
+        rnd = run_experiment(1, "preferential", n_seeds=5, forward_policy="random")
+        po2 = run_experiment(1, "preferential", n_seeds=5, forward_policy="power_of_two")
+        assert po2.met_rate_mean >= rnd.met_rate_mean - 0.005

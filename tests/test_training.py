@@ -1,0 +1,125 @@
+"""Training substrate tests: optimizer, data pipeline, compression, elastic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training.compression import (dequantize_int8, quantize_int8,
+                                        roundtrip_with_feedback)
+from repro.training.data import PrefetchIterator, SyntheticSource
+from repro.training.elastic import replace_mesh, shrink_batch, surviving_mesh
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state, schedule_lr)
+
+
+class TestOptimizer:
+    def test_adamw_reduces_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                          weight_decay=0.0, schedule="constant")
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = init_opt_state(params, cfg)
+
+        def loss(p):
+            return jnp.sum(jnp.square(p["w"]))
+
+        for _ in range(100):
+            grads = jax.grad(loss)(params)
+            params, state, _ = adamw_update(params, grads, state, cfg)
+        assert float(loss(params)) < 0.1
+
+    def test_grad_clip(self):
+        cfg = AdamWConfig(grad_clip=1.0)
+        params = {"w": jnp.zeros((4,))}
+        state = init_opt_state(params, cfg)
+        grads = {"w": jnp.full((4,), 100.0)}
+        _, _, metrics = adamw_update(params, grads, state, cfg)
+        assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+    def test_bf16_state_dtype(self):
+        cfg = AdamWConfig(state_dtype=jnp.bfloat16)
+        params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+        state = init_opt_state(params, cfg)
+        assert state.m["w"].dtype == jnp.bfloat16
+        grads = {"w": jnp.ones((4,), jnp.bfloat16)}
+        _, state, _ = adamw_update(params, grads, state, cfg)
+        assert state.v["w"].dtype == jnp.bfloat16
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in
+               (0, 5, 10, 50, 99)]
+        assert lrs[0] < lrs[1] < lrs[2]          # warmup rising
+        assert lrs[2] >= lrs[3] >= lrs[4]        # cosine falling
+        assert lrs[4] < 0.05
+
+
+class TestData:
+    def test_deterministic_per_step(self):
+        spec = {"x": jax.ShapeDtypeStruct((4, 8), jnp.float32),
+                "y": jax.ShapeDtypeStruct((4,), jnp.int32)}
+        s = SyntheticSource(spec, seed=3)
+        a, b = s.batch_at(7), s.batch_at(7)
+        np.testing.assert_array_equal(a["x"], b["x"])
+        c = s.batch_at(8)
+        assert not np.array_equal(a["x"], c["x"])
+
+    def test_prefetch_ordering(self):
+        spec = {"x": jax.ShapeDtypeStruct((2,), jnp.float32)}
+        it = PrefetchIterator(SyntheticSource(spec), start_step=5)
+        try:
+            steps = [next(it)[0] for _ in range(4)]
+            assert steps == [5, 6, 7, 8]
+        finally:
+            it.close()
+
+
+class TestCompression:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_int8_roundtrip_error_bound(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3.0
+        q, s = quantize_int8(x)
+        err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+        assert float(err) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_preserves_mean_signal(self):
+        """With feedback, the accumulated dequantized signal tracks the
+        accumulated true gradient (bias-free compression)."""
+        g = {"w": jnp.full((16,), 0.013)}
+        resid = None
+        total = jnp.zeros((16,))
+        for _ in range(50):
+            deq, resid = roundtrip_with_feedback(g, resid)
+            total = total + deq["w"]
+        np.testing.assert_allclose(np.asarray(total), 0.013 * 50,
+                                   rtol=0.05)
+
+
+class TestElastic:
+    def test_surviving_mesh_shapes(self):
+        n = len(jax.devices())
+        mesh = surviving_mesh(n, model_parallel=1)
+        assert mesh.size == n
+        mesh2 = surviving_mesh(n, model_parallel=64)
+        assert mesh2.size == n                # mp shrinks to fit
+
+    def test_replace_mesh_and_shrink_batch(self):
+        mesh = surviving_mesh(len(jax.devices()), 1)
+        tree = {"w": jnp.arange(32.0).reshape(8, 4)}
+        specs = {"w": (None, None)}
+        placed = replace_mesh(tree, specs, mesh)
+        np.testing.assert_array_equal(np.asarray(placed["w"]),
+                                      np.asarray(tree["w"]))
+        assert shrink_batch(256, old_dp=16, new_dp=12) == 192
+
+    def test_failure_recovery_end_to_end(self, tmp_path):
+        """Checkpoint under mesh A, 'lose' devices, restore under mesh B."""
+        from repro.training import checkpoint as ckpt
+        tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 8))}
+        ckpt.save_checkpoint(tmp_path, 10, tree)
+        restored, _ = ckpt.restore_latest(tmp_path, tree)
+        mesh = surviving_mesh(max(1, len(jax.devices()) // 2), 1)
+        placed = replace_mesh(restored, {"w": (None, None)}, mesh)
+        np.testing.assert_array_equal(np.asarray(placed["w"]),
+                                      np.asarray(tree["w"]))
