@@ -1,0 +1,65 @@
+"""Orchestrator hot-loop throughput: events processed per second.
+
+The event heap is the orchestration plane's hot path — every arrival,
+forward and completion passes through it.  This bench drives the unified
+core on the paper's scenario-1 workload (overload regime, so the forward
+path is exercised hard) and reports events/sec per (queue, topology)
+configuration, giving the perf trajectory a number to move.
+
+Run:  PYTHONPATH=src python benchmarks/orchestrator_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core.block_queue import FastPreferentialQueue
+from repro.core.queues import EDFQueue, FIFOQueue
+from repro.orchestration import Orchestrator, Router, Topology, get_workload
+
+_QUEUES = {
+    "fifo": FIFOQueue,
+    "preferential": FastPreferentialQueue,
+    "edf": EDFQueue,
+}
+
+
+def bench_orchestrator(queue_kind: str, topology: Topology,
+                       seeds=(0, 1)) -> Tuple[float, int]:
+    """(events per second, events per run) on paper/scenario1."""
+    wl = get_workload("paper/scenario1")
+    events = 0
+    elapsed = 0.0
+    for seed in seeds:
+        requests = wl.generate(seed)           # outside the timed region
+        orch = Orchestrator(topology, _QUEUES[queue_kind],
+                            Router(topology, seed=seed))
+        t0 = time.perf_counter()
+        res = orch.run(requests)
+        elapsed += time.perf_counter() - t0
+        events += res.events
+    return events / elapsed, events // len(seeds)
+
+
+def run(seeds=(0, 1)) -> List[Tuple[str, float, str]]:
+    rows = []
+    mesh = Topology.full_mesh(3)
+    ring = Topology.ring(6)
+    for kind in _QUEUES:
+        eps, n_events = bench_orchestrator(kind, mesh, seeds)
+        rows.append((f"orchestrator_mesh3_{kind}", 1e6 / eps,
+                     f"{eps / 1e3:.0f}k events/s ({n_events} events)"))
+    eps, n_events = bench_orchestrator("preferential", ring, seeds)
+    rows.append(("orchestrator_ring6_preferential", 1e6 / eps,
+                 f"{eps / 1e3:.0f}k events/s ({n_events} events)"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single seed, CI-friendly runtime")
+    args = ap.parse_args()
+    for name, us, derived in run(seeds=(0,) if args.smoke else (0, 1)):
+        print(f"{name},{us:.2f},{derived}")

@@ -38,6 +38,7 @@ def bench_queue(queue_cls, n: int, seed: int = 0) -> float:
 
 
 def run(depths=(100, 1000, 4000)) -> List[Tuple[str, float, str]]:
+    """CSV rows (name, us_per_push, derived) across queue depths."""
     rows = []
     for n in depths:
         t_faith = bench_queue(PreferentialQueue, n)
@@ -50,3 +51,14 @@ def run(depths=(100, 1000, 4000)) -> List[Tuple[str, float, str]]:
         rows.append((f"queue_push_fifo_n{n}", t_fifo * 1e6,
                      f"{t_fifo * 1e6:.2f}us"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shallow depths only, CI-friendly runtime")
+    args = ap.parse_args()
+    for name, us, derived in run(depths=(100, 500) if args.smoke
+                                 else (100, 1000, 4000)):
+        print(f"{name},{us:.2f},{derived}")

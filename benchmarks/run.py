@@ -25,13 +25,15 @@ def main() -> None:
 
     sections = []
 
-    from benchmarks import paper_tables, queue_bench, roofline_report, \
-        serving_bench
+    from benchmarks import orchestrator_bench, paper_tables, queue_bench, \
+        roofline_report, serving_bench
     sections.append(("fig5_fig6", lambda: paper_tables.fig5_fig6(seeds)))
     sections.append(("ablations",
                      lambda: paper_tables.ablations(max(3, seeds // 2))))
     sections.append(("queue_microbench", lambda: queue_bench.run(
         depths=(100, 1000) if args.quick else (100, 1000, 4000))))
+    sections.append(("orchestrator_throughput", lambda: orchestrator_bench.run(
+        seeds=(0,) if args.quick else (0, 1))))
     sections.append(("serving_engine", lambda: serving_bench.run(
         n_requests=30 if args.quick else 60)))
     sections.append(("roofline", lambda: roofline_report.table(

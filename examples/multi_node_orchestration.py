@@ -17,7 +17,7 @@ def main():
                              "preferential_compact", "edf"])
     ap.add_argument("--forward-policy", default="random",
                     choices=["random", "power_of_two", "least_loaded",
-                             "round_robin"])
+                             "round_robin", "batched_feasible"])
     ap.add_argument("--seeds", type=int, default=10)
     ap.add_argument("--window", type=float, default=None,
                     help="arrival window (UT); default = calibrated 110k")

@@ -118,6 +118,11 @@ class PreferentialQueue:
             assert abs(b.size - b.request.proc_time) < 1e-6, f"bad size at {b}"
             prev_end = b.end
 
+    def scheduled_blocks(self, cpu_free_time: float = 0.0):
+        """(start, end) per admitted block — the ledger the router's
+        ``batched_feasible`` policy scores against (gaps included)."""
+        return [(b.start, b.end) for b in self._blocks]
+
     def scheduled_late(self) -> int:
         """Number of blocks scheduled past their deadline (forced pushes only)."""
         return sum(1 for b in self._blocks if b.end > b.request.deadline + _EPS)

@@ -100,6 +100,23 @@ def feasible_batch(led: Ledger, ps: jnp.ndarray, ds: jnp.ndarray,
 
 
 @jax.jit
+def feasible_nodes(leds: Ledger, ps: jnp.ndarray, d: jnp.ndarray,
+                   cpu_frees: jnp.ndarray) -> jnp.ndarray:
+    """Cross-node companion of :func:`feasible_batch`: ONE request scored
+    against K candidate nodes' ledgers in a single device call.
+
+    ``leds`` holds stacked (K, N) arrays with a (K,) ``n``; ``cpu_frees``
+    is (K,).  ``ps`` is (K,): the request's processing time per candidate,
+    already divided by each node's speed factor on heterogeneous clusters.
+    Returns a (K,) bool mask — which candidates can still admit the
+    request within its deadline.  This is what the router's
+    ``batched_feasible`` policy calls per forwarding decision.
+    """
+    return jax.vmap(lambda led, p, cf: feasible(led, p, d, cf))(
+        leds, ps, cpu_frees)
+
+
+@jax.jit
 def push(led: Ledger, p: jnp.ndarray, d: jnp.ndarray,
          cpu_free: jnp.ndarray) -> Tuple[Ledger, jnp.ndarray]:
     """Admit if feasible; returns (new ledger, admitted flag).

@@ -14,6 +14,12 @@ discusses, as comparison points:
 
 Policies only read ``pending_work()`` — they never touch queue internals, so
 they compose with any queue discipline.
+
+.. note:: This module is the legacy fully-connected API.  New code should
+   use :class:`repro.orchestration.Router`, which implements the same
+   strategies (plus ``batched_feasible``) over an arbitrary
+   :class:`~repro.orchestration.topology.Topology`; the simulator routes
+   through it since the unified-orchestration refactor.
 """
 from __future__ import annotations
 
@@ -64,6 +70,15 @@ class LeastLoadedPolicy(ForwardPolicy):
 
 
 class RoundRobinPolicy(ForwardPolicy):
+    """Deterministic cycling over *stable node ids*.
+
+    The pointer indexes the global id space and skips the excluded node, so
+    a given pointer value always means the same node.  (Indexing into the
+    excluded-filtered candidate list — the previous behavior — silently
+    shifted which node each pointer value meant whenever ``exclude``
+    changed, starving some nodes.)
+    """
+
     name = "round_robin"
 
     def __init__(self, rng: random.Random):
@@ -71,10 +86,13 @@ class RoundRobinPolicy(ForwardPolicy):
         self._next = 0
 
     def choose(self, nodes: Sequence[MECNode], exclude: int) -> MECNode:
-        cands = _candidates(nodes, exclude)
-        node = cands[self._next % len(cands)]
-        self._next += 1
-        return node
+        n = len(nodes)
+        for _ in range(n):
+            node = nodes[self._next % n]
+            self._next += 1
+            if node.node_id != exclude:
+                return node
+        raise ValueError(f"no candidate besides node {exclude}")
 
 
 FORWARD_POLICIES = {

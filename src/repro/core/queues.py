@@ -12,13 +12,16 @@
   accepts iff no admitted request (old or new) misses its deadline.
 
 All queues expose ``push(request, cpu_free_time, forced) -> bool``,
-``pop() -> Request | None``, ``__len__`` and ``pending_work()`` so the
-simulator and the serving engine treat them uniformly.
+``pop() -> Request | None``, ``__len__``, ``pending_work()`` and
+``scheduled_blocks(cpu_free_time)`` (the (start, end) schedule the admission
+test committed to — consumed by the router's ``batched_feasible`` scoring)
+so the simulator and the serving engine treat them uniformly.
 """
 from __future__ import annotations
 
 import bisect
-from typing import List, Optional
+from collections import deque
+from typing import Deque, List, Optional, Tuple
 
 from repro.core.request import Request
 
@@ -29,7 +32,7 @@ class FIFOQueue:
     """SFA v1 FIFO queue with deadline admission test (paper baseline)."""
 
     def __init__(self) -> None:
-        self._items: List[Request] = []
+        self._items: Deque[Request] = deque()
         self._total_work = 0.0
 
     def __len__(self) -> int:
@@ -55,9 +58,17 @@ class FIFOQueue:
     def pop(self) -> Optional[Request]:
         if not self._items:
             return None
-        req = self._items.pop(0)
+        req = self._items.popleft()
         self._total_work -= req.proc_time
         return req
+
+    def scheduled_blocks(self, cpu_free_time: float) -> List[Tuple[float, float]]:
+        """Contiguous run-to-completion schedule starting at ``cpu_free_time``."""
+        out, t = [], cpu_free_time
+        for r in self._items:
+            out.append((t, t + r.proc_time))
+            t += r.proc_time
+        return out
 
 
 class EDFQueue:
@@ -127,6 +138,14 @@ class EDFQueue:
             self._total_work -= req.proc_time
             return req
         return None
+
+    def scheduled_blocks(self, cpu_free_time: float) -> List[Tuple[float, float]]:
+        """Contiguous schedule: main segment in deadline order, then overflow."""
+        out, t = [], cpu_free_time
+        for r in list(self._main) + list(self._overflow):
+            out.append((t, t + r.proc_time))
+            t += r.proc_time
+        return out
 
 
 QUEUE_TYPES = {

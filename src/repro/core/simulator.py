@@ -1,6 +1,9 @@
-"""MEC-LB Simulator — discrete-event reproduction of the paper's §IV.
+"""MEC-LB Simulator — the paper-config adapter over the orchestration core.
 
-Faithful behaviors:
+Faithful behaviors (now implemented once, in
+:class:`repro.orchestration.Orchestrator`; this module maps the paper's
+experiment space onto that core and is golden-value guarded against the
+pre-refactor event loop in tests/test_orchestration.py):
 
 * users send requests to their nearest MEC node (``Request.origin_node``);
 * admission is decided by the node's queue discipline (FIFO = SFA v1
@@ -11,7 +14,10 @@ Faithful behaviors:
 * a request that has exhausted its forwards is force-pushed and processed
   even if late (the paper uses the non-discarding SFA variant); the
   Beraldi [9] discard variant is available via ``discard_on_exhaust``;
-* every service always takes its worst-case processing time.
+* every service always takes its worst-case processing time;
+* the cluster is a homogeneous full mesh (``Topology.full_mesh``) — use the
+  orchestration API directly for rings, stars, two-tier or heterogeneous
+  clusters (DESIGN.md §4 has the migration table).
 
 The simulator is deterministic given (scenario, seed): arrival lists are
 regenerated from the seed for every policy so all disciplines see an
@@ -20,15 +26,12 @@ identical workload, while forwarding randomness uses an independent stream.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 import random
 import statistics
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 from repro.core.block_queue import FastPreferentialQueue, PreferentialQueue
-from repro.core.node import MECNode, QueueLike
-from repro.core.policies import make_policy
+from repro.core.node import QueueLike
 from repro.core.queues import EDFQueue, FIFOQueue
 from repro.core.request import Request
 from repro.core.scenarios import DEFAULT_ARRIVAL_WINDOW, SCENARIOS, generate_requests
@@ -82,74 +85,43 @@ class SimResult:
         return self.forwards / max(1, self.total_requests * self.config.max_forwards)
 
 
-_ARRIVAL, _COMPLETE = 0, 1
-
-
 def run_simulation(config: SimConfig,
                    requests: Optional[Sequence[Request]] = None) -> SimResult:
-    """Run one seeded simulation and return aggregate metrics."""
-    n_nodes = len(SCENARIOS[config.scenario])
-    nodes = [MECNode(i, make_queue(config.queue)) for i in range(n_nodes)]
-    fwd_rng = random.Random((config.seed, "forwarding").__hash__())
-    policy = make_policy(config.forward_policy, fwd_rng)
+    """Run one seeded simulation and return aggregate metrics.
+
+    Thin adapter: builds the paper's homogeneous full mesh and delegates the
+    event loop to :class:`repro.orchestration.Orchestrator`.
+    """
+    # Imported here, not at module top: repro.core.__init__ imports this
+    # module, and the orchestration modules import repro.core submodules.
+    from repro.orchestration.orchestrator import Orchestrator
+    from repro.orchestration.router import Router
+    from repro.orchestration.topology import Topology
+
+    topology = Topology.full_mesh(len(SCENARIOS[config.scenario]))
+    # str seeds hash via sha512 inside random.Random, so the forwarding
+    # stream is stable across processes (tuple.__hash__ of a str-bearing
+    # tuple is NOT — it varies with PYTHONHASHSEED).
+    fwd_rng = random.Random(f"forwarding:{config.seed}")
+    router = Router(topology, config.forward_policy, rng=fwd_rng)
+    orch = Orchestrator(topology, lambda: make_queue(config.queue), router,
+                        max_forwards=config.max_forwards,
+                        forward_delay=config.forward_delay,
+                        discard_on_exhaust=config.discard_on_exhaust)
 
     if requests is None:
         requests = generate_requests(config.scenario, config.seed,
                                      config.arrival_window)
-    total = len(requests)
-
-    seq = itertools.count()
-    heap: List = []
-    for req in requests:
-        heapq.heappush(heap, (req.arrival_time, next(seq), _ARRIVAL, req,
-                              nodes[req.origin_node]))
-
-    forwards = 0
-    discarded = 0
-    completed: List[Request] = []
-
-    def dispatch(node: MECNode, now: float) -> None:
-        req = node.start_next(now)
-        if req is not None:
-            heapq.heappush(heap, (node.busy_until, next(seq), _COMPLETE, req, node))
-
-    while heap:
-        now, _, kind, req, node = heapq.heappop(heap)
-        if kind == _COMPLETE:
-            node.complete(now)
-            completed.append(req)
-            dispatch(node, now)
-            continue
-
-        # ARRIVAL
-        node.metrics.received += 1
-        exhausted = req.forwards >= config.max_forwards
-        forced = exhausted and not config.discard_on_exhaust
-        if node.try_admit(req, now, forced=forced):
-            dispatch(node, now)
-        elif exhausted:
-            discarded += 1
-            node.metrics.discarded += 1
-        else:
-            req.forwards += 1
-            forwards += 1
-            node.metrics.forwards_out += 1
-            target = policy.choose(nodes, exclude=node.node_id)
-            heapq.heappush(heap, (now + config.forward_delay, next(seq),
-                                  _ARRIVAL, req, target))
-
-    met = sum(1 for r in completed if r.met_deadline)
-    resp = [r.completion_time - r.arrival_time for r in completed
-            if r.completion_time is not None]
+    res = orch.run(requests)
     return SimResult(
         config=config,
-        total_requests=total,
-        processed=len(completed),
-        met_deadline=met,
-        forwards=forwards,
-        discarded=discarded,
-        mean_response_time=statistics.fmean(resp) if resp else 0.0,
-        per_node_forwards=[n.metrics.forwards_out for n in nodes],
+        total_requests=res.total_requests,
+        processed=res.processed,
+        met_deadline=res.met_deadline,
+        forwards=res.forwards,
+        discarded=res.discarded,
+        mean_response_time=res.mean_response_time,
+        per_node_forwards=[m.forwards_out for m in res.per_node],
     )
 
 

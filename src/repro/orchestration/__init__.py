@@ -1,0 +1,44 @@
+"""Unified orchestration API — one event-driven core behind the simulator
+and the serving engine.
+
+Compose four pieces:
+
+* :class:`Topology`     — who forwards to whom, and per-node speed factors;
+* :class:`Workload`     — pluggable arrival processes + scenario registry;
+* :class:`Router`       — topology-aware forwarding strategies;
+* :class:`Orchestrator` — the single event-heap engine (admission,
+  sequential forwarding, hooks, per-node/per-service metrics).
+
+Quick start::
+
+    from repro.core.block_queue import FastPreferentialQueue
+    from repro.orchestration import (Orchestrator, Router, Topology,
+                                     get_workload)
+
+    topo = Topology.ring(6, speeds=[1, 1, 1, 2, 2, 4])
+    orch = Orchestrator(topo, FastPreferentialQueue,
+                        Router(topo, "power_of_two", seed=0))
+    result = orch.run(get_workload("paper/scenario3").generate(seed=0))
+    print(result.met_rate, result.per_service["S1"].met_rate)
+
+See DESIGN.md §4 for the full API reference and the migration table from
+the legacy ``SimConfig`` fields.
+"""
+from repro.orchestration.orchestrator import (Hooks, Orchestrator,
+                                              OrchestratorResult,
+                                              ServiceStats, place)
+from repro.orchestration.router import ROUTER_POLICIES, Router
+from repro.orchestration.topology import Topology
+from repro.orchestration.workload import (DiurnalWorkload, PoissonWorkload,
+                                          TraceWorkload, UniformWorkload,
+                                          Workload, available_workloads,
+                                          dump_trace, get_workload,
+                                          register_workload)
+
+__all__ = [
+    "Hooks", "Orchestrator", "OrchestratorResult", "ServiceStats", "place",
+    "ROUTER_POLICIES", "Router", "Topology",
+    "DiurnalWorkload", "PoissonWorkload", "TraceWorkload", "UniformWorkload",
+    "Workload", "available_workloads", "dump_trace", "get_workload",
+    "register_workload",
+]

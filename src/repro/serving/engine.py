@@ -24,6 +24,7 @@ the measured batched step time as the per-request proc_time upper bound).
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -34,6 +35,9 @@ from repro.core.block_queue import FastPreferentialQueue
 from repro.core.node import QueueLike
 from repro.core.queues import FIFOQueue
 from repro.core.request import Request, Service
+from repro.orchestration.orchestrator import place
+from repro.orchestration.router import Router
+from repro.orchestration.topology import Topology
 
 
 @dataclasses.dataclass
@@ -64,6 +68,11 @@ class ServeRequest:
     @property
     def deadline(self) -> float:
         return self.arrival + self.cls.deadline
+
+    @property
+    def proc_time(self) -> float:
+        """Worst-case per-request time (router feasibility scoring reads it)."""
+        return self.cls.proc_time
 
 
 class ServingReplica:
@@ -154,12 +163,32 @@ class ServingReplica:
 
 
 class DeadlineAwareEngine:
-    """Multi-replica orchestrator: admission + sequential forwarding."""
+    """Multi-replica orchestrator: admission + sequential forwarding.
+
+    Forwarding is NOT re-implemented here — target selection and the
+    admit/forward/force loop come from the orchestration core
+    (:class:`repro.orchestration.Router` + :func:`repro.orchestration.place`),
+    so the engine honors any topology (e.g. ``Topology.two_tier`` with a
+    fast cloud replica group) and any router policy, including
+    ``batched_feasible`` device-side scoring.
+    """
 
     def __init__(self, replicas: Sequence[ServingReplica], max_forwards: int = 2,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, topology: Optional[Topology] = None,
+                 forward_policy: str = "random"):
         self.replicas = list(replicas)
+        for idx, rep in enumerate(self.replicas):
+            if rep.replica_id != idx:
+                raise ValueError("replicas must be indexed by replica_id "
+                                 f"(got id {rep.replica_id} at position {idx})")
         self.max_forwards = max_forwards
+        self.topology = topology if topology is not None \
+            else Topology.full_mesh(len(self.replicas))
+        if self.topology.n_nodes != len(self.replicas):
+            raise ValueError(f"topology has {self.topology.n_nodes} nodes "
+                             f"for {len(self.replicas)} replicas")
+        self.router = Router(self.topology, forward_policy,
+                             rng=random.Random(f"serving-fwd:{rng_seed}"))
         self._rng = np.random.default_rng(rng_seed)
         self._next_rid = 0
         self.forwards = 0
@@ -170,20 +199,17 @@ class DeadlineAwareEngine:
         req = ServeRequest(payload=payload, cls=cls, arrival=now,
                            rid=self._next_rid)
         self._next_rid += 1
-        target = self.replicas[origin if origin is not None
-                               else self._rng.integers(len(self.replicas))]
-        self._route(req, target, now)
+        if origin is None:
+            origin = int(self._rng.integers(len(self.replicas)))
+        place(req, origin, self.replicas, self.router, now=now,
+              max_forwards=self.max_forwards,
+              admit=lambda rep, r, t, forced: rep.try_admit(r, t, forced=forced),
+              on_forward=self._on_forward)
         return req
 
-    def _route(self, req: ServeRequest, target: ServingReplica,
-               now: float) -> None:
-        forced = req.forwards >= self.max_forwards
-        if target.try_admit(req, now, forced=forced):
-            return
-        req.forwards += 1
+    def _on_forward(self, req: ServeRequest, src: ServingReplica,
+                    dst: ServingReplica, now: float) -> None:
         self.forwards += 1
-        others = [r for r in self.replicas if r is not target] or [target]
-        self._route(req, others[int(self._rng.integers(len(others)))], now)
 
     def advance(self, now: float) -> None:
         """Event-driven execution: run every replica's pending runs whose

@@ -2,6 +2,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.block_queue import FastPreferentialQueue, PreferentialQueue

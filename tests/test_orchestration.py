@@ -1,0 +1,312 @@
+"""Unified orchestration core: golden equivalence with the pre-refactor
+simulator, topology semantics, heterogeneous speeds, hooks, and the
+synchronous place() helper."""
+import heapq
+import itertools
+import json
+import os
+import random
+import statistics
+
+import pytest
+
+from repro.core.block_queue import FastPreferentialQueue
+from repro.core.node import MECNode
+from repro.core.queues import FIFOQueue
+from repro.core.request import SERVICES, Request
+from repro.core.scenarios import SCENARIOS, generate_requests
+from repro.core.simulator import SimConfig, make_queue, run_simulation
+from repro.orchestration import (Hooks, Orchestrator, Router, Topology,
+                                 UniformWorkload, place)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_simulator.json")
+
+
+# ---------------------------------------------------------------------------
+# The pre-refactor event loop, verbatim (modulo the process-stable forwarding
+# rng, shared with the adapter).  The adapter-backed run_simulation must be
+# indistinguishable from this on the paper's experiment space.
+# ---------------------------------------------------------------------------
+_ARRIVAL, _COMPLETE = 0, 1
+
+
+def _legacy_run_simulation(config: SimConfig):
+    n_nodes = len(SCENARIOS[config.scenario])
+    nodes = [MECNode(i, make_queue(config.queue)) for i in range(n_nodes)]
+    fwd_rng = random.Random(f"forwarding:{config.seed}")
+
+    requests = generate_requests(config.scenario, config.seed,
+                                 config.arrival_window)
+    seq = itertools.count()
+    heap = []
+    for req in requests:
+        heapq.heappush(heap, (req.arrival_time, next(seq), _ARRIVAL, req,
+                              nodes[req.origin_node]))
+
+    forwards = discarded = 0
+    completed = []
+
+    def dispatch(node, now):
+        req = node.start_next(now)
+        if req is not None:
+            heapq.heappush(heap, (node.busy_until, next(seq), _COMPLETE, req,
+                                  node))
+
+    while heap:
+        now, _, kind, req, node = heapq.heappop(heap)
+        if kind == _COMPLETE:
+            node.complete(now)
+            completed.append(req)
+            dispatch(node, now)
+            continue
+        node.metrics.received += 1
+        exhausted = req.forwards >= config.max_forwards
+        forced = exhausted and not config.discard_on_exhaust
+        if node.try_admit(req, now, forced=forced):
+            dispatch(node, now)
+        elif exhausted:
+            discarded += 1
+        else:
+            req.forwards += 1
+            forwards += 1
+            node.metrics.forwards_out += 1
+            target = fwd_rng.choice(
+                [n for n in nodes if n.node_id != node.node_id])
+            heapq.heappush(heap, (now + config.forward_delay, next(seq),
+                                  _ARRIVAL, req, target))
+
+    met = sum(1 for r in completed if r.met_deadline)
+    resp = [r.completion_time - r.arrival_time for r in completed
+            if r.completion_time is not None]
+    return dict(total_requests=len(requests), processed=len(completed),
+                met_deadline=met, forwards=forwards, discarded=discarded,
+                mean_response_time=statistics.fmean(resp) if resp else 0.0,
+                per_node_forwards=[n.metrics.forwards_out for n in nodes])
+
+
+GOLDEN_GRID = [(sc, q, seed) for sc in (1, 2, 3)
+               for q in ("fifo", "preferential", "edf") for seed in (0, 1)]
+
+
+class TestGoldenEquivalence:
+    @pytest.mark.parametrize("scenario,queue,seed", GOLDEN_GRID)
+    def test_adapter_matches_legacy_loop(self, scenario, queue, seed):
+        cfg = SimConfig(scenario=scenario, queue=queue, seed=seed)
+        legacy = _legacy_run_simulation(cfg)
+        res = run_simulation(cfg)
+        assert res.total_requests == legacy["total_requests"]
+        assert res.processed == legacy["processed"]
+        assert res.met_deadline == legacy["met_deadline"]
+        assert res.forwards == legacy["forwards"]
+        assert res.discarded == legacy["discarded"]
+        assert res.per_node_forwards == legacy["per_node_forwards"]
+        assert res.mean_response_time == pytest.approx(
+            legacy["mean_response_time"], rel=1e-12)
+
+    def test_pinned_golden_values(self):
+        """Cross-process / cross-version regression guard (stable rng)."""
+        with open(GOLDEN_PATH) as f:
+            golden = json.load(f)
+        for scenario, queue, seed in GOLDEN_GRID:
+            g = golden[f"{scenario}-{queue}-{seed}"]
+            r = run_simulation(SimConfig(scenario=scenario, queue=queue,
+                                         seed=seed))
+            assert r.met_deadline == g["met_deadline"], (scenario, queue, seed)
+            assert r.forwards == g["forwards"]
+            assert r.discarded == g["discarded"]
+            assert r.per_node_forwards == g["per_node_forwards"]
+            assert r.mean_response_time == pytest.approx(
+                g["mean_response_time"], rel=1e-9)
+
+
+class TestTopology:
+    def test_full_mesh(self):
+        t = Topology.full_mesh(4)
+        assert t.neighbors(0) == (1, 2, 3)
+        assert t.neighbors(2) == (0, 1, 3)
+        assert t.homogeneous
+
+    def test_ring(self):
+        t = Topology.ring(5)
+        assert t.neighbors(0) == (1, 4)
+        assert t.neighbors(3) == (2, 4)
+        assert all(t.degree(i) == 2 for i in range(5))
+
+    def test_star(self):
+        t = Topology.star(4, hub=0)
+        assert t.neighbors(0) == (1, 2, 3)
+        assert t.neighbors(1) == (0,)
+
+    def test_two_tier(self):
+        t = Topology.two_tier(3, n_cloud=2, cloud_speed=4.0)
+        assert t.n_nodes == 5
+        assert t.neighbors(0) == (3, 4)          # edge -> clouds only
+        assert t.neighbors(3) == (0, 1, 2, 4)    # cloud -> edges + peer
+        assert t.speed(0) == 1.0 and t.speed(4) == 4.0
+        assert not t.homogeneous
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Topology(3, speeds=[1.0, 2.0])
+        with pytest.raises(ValueError):
+            Topology(2, edges=[(0, 5)])
+        with pytest.raises(ValueError):
+            Topology(2, speeds=[1.0, -1.0])
+
+
+def _small_workload(n_nodes, per_node=40):
+    counts = [{"S3": per_node, "S6": per_node} for _ in range(n_nodes)]
+    return UniformWorkload(counts, window=2000.0, name="t", seed_key="t")
+
+
+class TestOrchestrator:
+    def test_ring_topology_runs_end_to_end(self):
+        topo = Topology.ring(4)
+        orch = Orchestrator(topo, FastPreferentialQueue, Router(topo, seed=1))
+        res = orch.run(_small_workload(4).generate(seed=0))
+        assert res.processed == res.total_requests
+        assert res.discarded == 0
+        assert set(res.per_service) == {"S3", "S6"}
+        assert sum(s.processed for s in res.per_service.values()) == res.processed
+
+    def test_forwards_respect_topology(self):
+        """On a ring every forward must land on an adjacent node."""
+        topo = Topology.ring(5)
+        hops = []
+        hooks = Hooks(on_forward=lambda req, src, dst, now:
+                      hops.append((src.node_id, dst.node_id)))
+        orch = Orchestrator(topo, FIFOQueue, Router(topo, seed=3),
+                            hooks=hooks)
+        orch.run(_small_workload(5, per_node=400).generate(seed=0))
+        assert hops, "expected some forwarding under this load"
+        for src, dst in hops:
+            assert dst in topo.neighbors(src)
+
+    def test_heterogeneous_speed_scales_proc_time(self):
+        """A single 2x node finishes the same workload in half the time."""
+        reqs = [Request(service=SERVICES["S1"], arrival_time=0.0,
+                        origin_node=0) for _ in range(10)]
+        slow = Orchestrator(Topology(1), FIFOQueue).run(list(reqs))
+        reqs2 = [Request(service=SERVICES["S1"], arrival_time=0.0,
+                         origin_node=0) for _ in range(10)]
+        fast = Orchestrator(Topology(1, speeds=[2.0]), FIFOQueue).run(reqs2)
+        assert fast.end_time == pytest.approx(slow.end_time / 2.0)
+        assert fast.processed == slow.processed == 10
+
+    def test_heterogeneous_does_not_mutate_caller_requests(self):
+        req = Request(service=SERVICES["S3"], arrival_time=0.0, origin_node=0)
+        res = Orchestrator(Topology(1, speeds=[4.0]), FIFOQueue).run([req])
+        assert req.service.proc_time == SERVICES["S3"].proc_time
+        assert req.completion_time == pytest.approx(5.0)   # 20 / 4x
+        assert res.completed == [req]
+
+    def test_faster_cloud_tier_improves_met_rate(self):
+        wl = _small_workload(3, per_node=400)
+        topo_flat = Topology.two_tier(2, n_cloud=1, cloud_speed=1.0)
+        topo_fast = Topology.two_tier(2, n_cloud=1, cloud_speed=8.0)
+        r_flat = Orchestrator(topo_flat, FastPreferentialQueue,
+                              Router(topo_flat, seed=0)).run(wl.generate(0))
+        r_fast = Orchestrator(topo_fast, FastPreferentialQueue,
+                              Router(topo_fast, seed=0)).run(wl.generate(0))
+        assert r_fast.met_deadline >= r_flat.met_deadline
+
+    def test_batched_feasible_policy_end_to_end(self):
+        pytest.importorskip("jax")
+        topo = Topology.full_mesh(3)
+        orch = Orchestrator(topo, FastPreferentialQueue,
+                            Router(topo, "batched_feasible", seed=0))
+        res = orch.run(_small_workload(3, per_node=400).generate(seed=0))
+        assert res.processed == res.total_requests
+        assert res.forwards > 0
+
+    def test_discard_variant_and_hooks(self):
+        topo = Topology.full_mesh(2)
+        events = {"admit": 0, "forward": 0, "discard": 0, "complete": 0}
+        hooks = Hooks(
+            on_admit=lambda *a: events.__setitem__("admit", events["admit"] + 1),
+            on_forward=lambda *a: events.__setitem__("forward", events["forward"] + 1),
+            on_discard=lambda *a: events.__setitem__("discard", events["discard"] + 1),
+            on_complete=lambda *a: events.__setitem__("complete", events["complete"] + 1),
+        )
+        orch = Orchestrator(topo, FIFOQueue, Router(topo, seed=0),
+                            discard_on_exhaust=True, hooks=hooks)
+        res = orch.run(_small_workload(2, per_node=500).generate(seed=0))
+        assert res.discarded > 0
+        assert events["discard"] == res.discarded
+        assert events["admit"] == events["complete"] == res.processed
+        assert events["forward"] == res.forwards
+        assert res.processed + res.discarded == res.total_requests
+
+    def test_isolated_node_forces_locally(self):
+        """A node with no neighbors can never forward: everything is
+        admitted locally (forced when infeasible), nothing is lost."""
+        topo = Topology(2, edges=[])            # two isolated nodes
+        orch = Orchestrator(topo, FIFOQueue)
+        res = orch.run(_small_workload(2, per_node=50).generate(seed=0))
+        assert res.forwards == 0
+        assert res.processed == res.total_requests
+
+    def test_run_is_reusable(self):
+        """Node/queue state must not leak between runs of one instance."""
+        topo = Topology.full_mesh(2)
+        orch = Orchestrator(topo, FIFOQueue, Router(topo, seed=0))
+        a = orch.run(_small_workload(2).generate(seed=0))
+        b = orch.run(_small_workload(2).generate(seed=0))
+        assert b.processed == b.total_requests
+        assert b.met_deadline == a.met_deadline
+        assert [m.received for m in b.per_node] == \
+               [m.received for m in a.per_node]
+
+    def test_mismatched_router_topology_rejected(self):
+        with pytest.raises(ValueError):
+            Orchestrator(Topology.ring(3), FIFOQueue,
+                         Router(Topology.ring(4)))
+
+
+class TestPlace:
+    def _nodes(self, n):
+        return [MECNode(i, FIFOQueue()) for i in range(n)]
+
+    def test_admits_locally_when_feasible(self):
+        nodes = self._nodes(2)
+        topo = Topology.full_mesh(2)
+        req = Request(service=SERVICES["S3"], arrival_time=0.0, origin_node=0)
+        outcome, target = place(
+            req, 0, nodes, Router(topo, seed=0), now=0.0, max_forwards=2,
+            admit=lambda nd, r, t, forced: nd.try_admit(r, t, forced=forced))
+        assert outcome == "admitted" and target is nodes[0]
+        assert req.forwards == 0
+
+    def test_forwards_then_forces(self):
+        nodes = self._nodes(2)
+        topo = Topology.full_mesh(2)
+        router = Router(topo, seed=0)
+        hops = []
+        svc = SERVICES["S1"]                     # 180 UT work, 9000 deadline
+        # saturate both nodes so a fresh request must exhaust its forwards
+        for nd in nodes:
+            for _ in range(60):
+                nd.try_admit(Request(service=svc, arrival_time=0.0,
+                                     origin_node=nd.node_id), 0.0, forced=True)
+        req = Request(service=svc, arrival_time=0.0, origin_node=0)
+        outcome, target = place(
+            req, 0, nodes, router, now=0.0, max_forwards=2,
+            admit=lambda nd, r, t, forced: nd.try_admit(r, t, forced=forced),
+            on_forward=lambda r, s, d, t: hops.append((s.node_id, d.node_id)))
+        assert outcome == "admitted"             # forced, never dropped
+        assert req.forwards == 2 and len(hops) == 2
+
+    def test_discard_on_exhaust(self):
+        nodes = self._nodes(2)
+        topo = Topology.full_mesh(2)
+        svc = SERVICES["S1"]
+        for nd in nodes:
+            for _ in range(60):
+                nd.try_admit(Request(service=svc, arrival_time=0.0,
+                                     origin_node=nd.node_id), 0.0, forced=True)
+        req = Request(service=svc, arrival_time=0.0, origin_node=0)
+        outcome, _ = place(
+            req, 0, nodes, Router(topo, seed=0), now=0.0, max_forwards=2,
+            discard_on_exhaust=True,
+            admit=lambda nd, r, t, forced: nd.try_admit(r, t, forced=forced))
+        assert outcome == "discarded"

@@ -1,0 +1,157 @@
+"""Forwarding-policy coverage for the topology-aware Router: determinism
+under a fixed rng, exclusion/neighbor invariants, po2 sampling semantics,
+stable round-robin cycling, and batched feasibility scoring."""
+import random
+
+import pytest
+
+from repro.core.node import MECNode
+from repro.core.queues import FIFOQueue
+from repro.core.request import Request, Service
+from repro.orchestration import ROUTER_POLICIES, Router, Topology
+
+
+def mkreq(p=20.0, d=9000.0, arrival=0.0):
+    svc = Service(f"p{p}", pixels=1, environment="t", proc_time=p, deadline=d)
+    return Request(service=svc, arrival_time=arrival, origin_node=0)
+
+
+def nodes_with_load(loads):
+    """One FIFO node per entry, pre-loaded with `load` units of work."""
+    nodes = [MECNode(i, FIFOQueue()) for i in range(len(loads))]
+    for node, load in zip(nodes, loads):
+        if load:
+            node.try_admit(mkreq(p=float(load)), 0.0, forced=True)
+    return nodes
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("policy", ["random", "power_of_two",
+                                        "least_loaded", "round_robin"])
+    def test_same_rng_same_stream(self, policy):
+        topo = Topology.full_mesh(5)
+        picks = []
+        for _ in range(2):
+            router = Router(topo, policy, rng=random.Random(123))
+            nodes = nodes_with_load([10, 40, 20, 30, 50])
+            picks.append([router.choose_id(nodes, src=i % 5)
+                          for i in range(40)])
+        assert picks[0] == picks[1]
+
+
+class TestExclusionInvariant:
+    @pytest.mark.parametrize("policy", ["random", "power_of_two",
+                                        "least_loaded", "round_robin"])
+    @pytest.mark.parametrize("topo_factory", [
+        lambda: Topology.full_mesh(6),
+        lambda: Topology.ring(6),
+        lambda: Topology.star(6, hub=2),
+    ])
+    def test_never_self_always_neighbor(self, policy, topo_factory):
+        topo = topo_factory()
+        router = Router(topo, policy, seed=7)
+        nodes = nodes_with_load([15, 25, 5, 45, 35, 55])
+        for step in range(60):
+            src = step % topo.n_nodes
+            if not topo.neighbors(src):
+                continue
+            pick = router.choose_id(nodes, src)
+            assert pick != src
+            assert pick in topo.neighbors(src)
+
+
+class TestPowerOfTwo:
+    def test_picks_less_loaded_of_sample(self):
+        """po2 must return whichever of ITS OWN two samples has less
+        pending work — replay the sample with an identical rng."""
+        topo = Topology.full_mesh(6)
+        loads = [10, 60, 20, 50, 30, 40]
+        for trial in range(30):
+            router = Router(topo, "power_of_two",
+                            rng=random.Random(1000 + trial))
+            shadow = random.Random(1000 + trial)
+            nodes = nodes_with_load(loads)
+            cands = topo.neighbors(0)
+            a, b = shadow.sample(cands, 2)
+            expect = a if loads[a] <= loads[b] else b
+            assert router.choose_id(nodes, 0) == expect
+
+    def test_single_candidate_short_circuits(self):
+        topo = Topology.star(3, hub=0)
+        router = Router(topo, "power_of_two", seed=0)
+        nodes = nodes_with_load([0, 0, 0])
+        assert router.choose_id(nodes, 1) == 0    # leaf's only neighbor
+
+
+class TestLeastLoaded:
+    def test_minimum_pending_work(self):
+        topo = Topology.full_mesh(4)
+        router = Router(topo, "least_loaded", seed=0)
+        nodes = nodes_with_load([5, 80, 10, 60])
+        assert router.choose_id(nodes, 0) == 2    # node 0 excluded
+        assert router.choose_id(nodes, 2) == 0
+
+
+class TestRoundRobinStable:
+    def test_cycles_stable_ids_on_full_mesh(self):
+        """With a fixed src the rotation visits every other node in id
+        order, repeatedly."""
+        topo = Topology.full_mesh(4)
+        router = Router(topo, "round_robin", seed=0)
+        nodes = nodes_with_load([0, 0, 0, 0])
+        picks = [router.choose_id(nodes, 0) for _ in range(6)]
+        assert picks == [1, 2, 3, 1, 2, 3]
+
+    def test_pointer_meaning_survives_changing_src(self):
+        """The regression the legacy policy had: the pointer indexes stable
+        node ids, so interleaving different sources must not starve any
+        node or double-serve another."""
+        topo = Topology.full_mesh(3)
+        router = Router(topo, "round_robin", seed=0)
+        nodes = nodes_with_load([0, 0, 0])
+        picks = [router.choose_id(nodes, src) for src in
+                 [0, 1, 2, 0, 1, 2, 0, 1, 2]]
+        # pointer walks 0,1,2,0,1,2,... skipping src each time
+        assert picks == [1, 2, 0, 1, 2, 0, 1, 2, 0]
+
+
+class TestBatchedFeasible:
+    def test_prefers_feasible_over_lighter_infeasible(self):
+        pytest.importorskip("jax")
+        from repro.core.block_queue import FastPreferentialQueue
+        topo = Topology.full_mesh(3)
+        router = Router(topo, "batched_feasible", seed=0)
+        # node 1: light FIFO load (95) that still blocks a deadline-100
+        # request; node 2: much heavier (500) preferential load, but its
+        # block is right-aligned near t=8500 so the front window is free.
+        nodes = [MECNode(0, FIFOQueue()), MECNode(1, FIFOQueue()),
+                 MECNode(2, FastPreferentialQueue())]
+        nodes[1].try_admit(mkreq(p=95.0, d=9000.0), 0.0, forced=True)
+        assert nodes[2].try_admit(mkreq(p=500.0, d=9000.0), 0.0, forced=False)
+        tight = mkreq(p=10.0, d=100.0)
+        # least_loaded would pick node 1 (95 < 500); feasibility flips it
+        pick = router.choose_id(nodes, 0, request=tight, now=0.0)
+        assert pick == 2
+
+    def test_falls_back_to_least_loaded_when_none_feasible(self):
+        jax = pytest.importorskip("jax")
+        topo = Topology.full_mesh(3)
+        router = Router(topo, "batched_feasible", seed=0)
+        nodes = nodes_with_load([0, 500, 200])
+        hopeless = mkreq(p=50.0, d=10.0)          # p > d: nobody can serve
+        assert router.choose_id(nodes, 0, request=hopeless, now=0.0) == 2
+
+    def test_accounts_for_node_speed(self):
+        """On heterogeneous topologies feasibility uses the speed-scaled
+        processing time: a fast node can take work a slow one cannot."""
+        pytest.importorskip("jax")
+        topo = Topology.full_mesh(3, speeds=[1.0, 1.0, 4.0])
+        router = Router(topo, "batched_feasible", seed=0)
+        nodes = [MECNode(i, FIFOQueue()) for i in range(3)]
+        req = mkreq(p=50.0, d=30.0)     # infeasible at 1x, 12.5 UT at 4x
+        assert router.choose_id(nodes, 0, request=req, now=0.0) == 2
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError):
+            Router(Topology.full_mesh(2), "zigzag")
+        assert "batched_feasible" in ROUTER_POLICIES

@@ -1,0 +1,162 @@
+"""Workload generators + scenario registry: seed determinism, registry
+counts, paper-scenario equivalence, Poisson/diurnal/trace processes."""
+import collections
+
+import pytest
+
+from repro.core.request import SERVICES
+from repro.core.scenarios import (DEFAULT_ARRIVAL_WINDOW, SCENARIOS,
+                                  generate_requests)
+from repro.orchestration import (DiurnalWorkload, PoissonWorkload,
+                                 TraceWorkload, UniformWorkload,
+                                 available_workloads, dump_trace,
+                                 get_workload, register_workload)
+
+
+def per_node_service_counts(requests):
+    counts = collections.Counter()
+    for r in requests:
+        counts[(r.origin_node, r.service.name)] += 1
+    return counts
+
+
+class TestRegistry:
+    def test_paper_scenarios_registered(self):
+        names = available_workloads()
+        for s in (1, 2, 3):
+            assert f"paper/scenario{s}" in names
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(ValueError):
+            get_workload("paper/scenario99")
+
+    def test_duplicate_registration_raises(self):
+        register_workload("t/dup", lambda: UniformWorkload([{"S3": 1}]))
+        with pytest.raises(ValueError):
+            register_workload("t/dup", lambda: UniformWorkload([{"S3": 1}]))
+        register_workload("t/dup", lambda: UniformWorkload([{"S3": 2}]),
+                          overwrite=True)
+
+    @pytest.mark.parametrize("scenario", [1, 2, 3])
+    def test_counts_match_registry(self, scenario):
+        """Per-(node, service) request counts equal the Table II registry."""
+        wl = get_workload(f"paper/scenario{scenario}")
+        counts = per_node_service_counts(wl.generate(seed=5))
+        for node_idx, svc_counts in enumerate(SCENARIOS[scenario]):
+            for sname, want in svc_counts.items():
+                assert counts[(node_idx, sname)] == want
+
+    @pytest.mark.parametrize("scenario", [1, 2, 3])
+    def test_reproduces_generate_requests(self, scenario):
+        """The registered paper workloads generate the exact stream the
+        legacy generate_requests produced (golden-path compatibility)."""
+        wl = get_workload(f"paper/scenario{scenario}")
+        a = wl.generate(seed=3)
+        b = generate_requests(scenario, seed=3, arrival_window=DEFAULT_ARRIVAL_WINDOW)
+        assert [(r.arrival_time, r.service.name, r.origin_node) for r in a] == \
+               [(r.arrival_time, r.service.name, r.origin_node) for r in b]
+
+
+class TestSeedDeterminism:
+    @pytest.mark.parametrize("factory", [
+        lambda: UniformWorkload([{"S1": 30, "S3": 50}, {"S2": 20}],
+                                window=500.0, name="u"),
+        lambda: PoissonWorkload([{"S1": 0.05, "S3": 0.1}, {"S2": 0.02}],
+                                horizon=500.0, name="p"),
+        lambda: DiurnalWorkload([{"S1": 30, "S3": 50}, {"S2": 20}],
+                                window=500.0, peaks=3, name="d"),
+    ], ids=["uniform", "poisson", "diurnal"])
+    def test_same_seed_same_stream(self, factory):
+        a = factory().generate(seed=11)
+        b = factory().generate(seed=11)
+        c = factory().generate(seed=12)
+        key = lambda rs: [(r.arrival_time, r.service.name, r.origin_node)
+                          for r in rs]
+        assert key(a) == key(b)
+        assert key(a) != key(c)
+
+    def test_stream_stable_across_hash_randomization(self):
+        """Custom (str-keyed) workloads must not depend on PYTHONHASHSEED —
+        str rng seeds hash via sha512, unlike str-bearing tuple hashes."""
+        import os
+        import subprocess
+        import sys
+        src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+        code = (
+            "from repro.orchestration import (DiurnalWorkload, "
+            "PoissonWorkload, UniformWorkload)\n"
+            "for wl in (UniformWorkload([{'S3': 4}], window=100.0, name='u'),\n"
+            "           PoissonWorkload([{'S3': 0.1}], horizon=100.0),\n"
+            "           DiurnalWorkload([{'S3': 4}], window=100.0)):\n"
+            "    print([round(r.arrival_time, 9) for r in wl.generate(0)])\n"
+        )
+        outs = set()
+        for hashseed in ("1", "2"):
+            env = dict(os.environ,
+                       PYTHONPATH=os.path.abspath(src),
+                       PYTHONHASHSEED=hashseed)
+            res = subprocess.run(
+                [sys.executable, "-c", code], capture_output=True, text=True,
+                env=env)
+            assert res.returncode == 0, res.stderr
+            outs.add(res.stdout)
+        assert len(outs) == 1, "arrival streams vary with PYTHONHASHSEED"
+
+    def test_sorted_by_arrival(self):
+        reqs = PoissonWorkload([{"S3": 0.2}], horizon=300.0).generate(seed=0)
+        times = [r.arrival_time for r in reqs]
+        assert times == sorted(times)
+
+
+class TestPoisson:
+    def test_from_counts_matches_expected_volume(self):
+        counts = [{"S3": 400}, {"S6": 200}]
+        wl = PoissonWorkload.from_counts(counts, horizon=1000.0)
+        n = len(wl.generate(seed=0))
+        assert 450 <= n <= 750          # ~600 expected, Poisson spread
+
+    def test_respects_horizon_and_nodes(self):
+        wl = PoissonWorkload([{"S3": 0.3}, {"S6": 0.3}], horizon=200.0)
+        reqs = wl.generate(seed=1)
+        assert wl.n_nodes == 2
+        assert all(0 < r.arrival_time <= 200.0 for r in reqs)
+        assert {r.origin_node for r in reqs} == {0, 1}
+
+
+class TestDiurnal:
+    def test_counts_exact_and_peaked(self):
+        wl = DiurnalWorkload([{"S3": 4000}], window=1000.0, peaks=1,
+                             amplitude=1.0)
+        reqs = wl.generate(seed=2)
+        assert len(reqs) == 4000
+        # intensity 1 + sin(2*pi*t/W): first half-window holds the peak
+        first_half = sum(1 for r in reqs if r.arrival_time < 500.0)
+        assert first_half > 0.6 * len(reqs)
+
+    def test_amplitude_validated(self):
+        with pytest.raises(ValueError):
+            DiurnalWorkload([{"S3": 1}], amplitude=1.5)
+
+
+class TestTrace:
+    def test_roundtrip(self, tmp_path):
+        src = UniformWorkload([{"S1": 5, "S4": 3}, {"S2": 4}],
+                              window=100.0, name="rt").generate(seed=0)
+        path = tmp_path / "trace.jsonl"
+        dump_trace(src, str(path))
+        replay = TraceWorkload(str(path)).generate()
+        key = lambda rs: [(r.arrival_time, r.service.name, r.origin_node)
+                          for r in rs]
+        assert key(replay) == key(src)
+        assert TraceWorkload(str(path)).n_nodes == 2
+
+    def test_unknown_service_rejected(self, tmp_path):
+        path = tmp_path / "bad.jsonl"
+        path.write_text('{"service": "S99", "arrival_time": 1.0, "node": 0}\n')
+        with pytest.raises(ValueError):
+            TraceWorkload(str(path))
+
+    def test_total_requests_helper(self):
+        wl = UniformWorkload([{"S1": 7}], window=10.0, name="tt")
+        assert wl.total_requests() == 7
+        assert SERVICES["S1"].proc_time == 180.0
