@@ -25,8 +25,8 @@ def main() -> None:
 
     sections = []
 
-    from benchmarks import orchestrator_bench, paper_tables, queue_bench, \
-        roofline_report, serving_bench
+    from benchmarks import fleetsim_bench, orchestrator_bench, paper_tables, \
+        queue_bench, roofline_report, serving_bench
     sections.append(("fig5_fig6", lambda: paper_tables.fig5_fig6(seeds)))
     sections.append(("ablations",
                      lambda: paper_tables.ablations(max(3, seeds // 2))))
@@ -34,6 +34,10 @@ def main() -> None:
         depths=(100, 1000) if args.quick else (100, 1000, 4000))))
     sections.append(("orchestrator_throughput", lambda: orchestrator_bench.run(
         seeds=(0,) if args.quick else (0, 1))))
+    # full runs refresh the committed BENCH_fleetsim.json baseline
+    sections.append(("fleetsim_throughput", lambda: fleetsim_bench.run(
+        smoke=args.quick,
+        json_path=None if args.quick else fleetsim_bench.JSON_DEFAULT)))
     sections.append(("serving_engine", lambda: serving_bench.run(
         n_requests=30 if args.quick else 60)))
     sections.append(("roofline", lambda: roofline_report.table(

@@ -73,6 +73,10 @@ def main():
                DiurnalWorkload(SCENARIOS[1], window=DEFAULT_ARRIVAL_WINDOW,
                                peaks=2, amplitude=0.8), seeds)
 
+    print("\nevery configuration above also runs device-resident: "
+          "examples/fleet_sweep.py vmaps whole (seeds x SLA) grids via "
+          "repro.fleetsim (cross-validated against this event heap)")
+
 
 if __name__ == "__main__":
     main()

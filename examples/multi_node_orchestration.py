@@ -34,6 +34,8 @@ def main():
 
     print(f"scenario {args.scenario}, {args.seeds} seeds, "
           f"forwarding={args.forward_policy}, M={args.max_forwards}")
+    print("(seed-by-seed on the event heap; for a whole (seeds x SLA) grid "
+          "as ONE device call, see examples/fleet_sweep.py)")
     print(f"{'queue':24s} {'met%':>8s} {'±':>6s} {'fwd%':>8s} {'±':>6s} "
           f"{'resp':>9s}")
     for q in args.queues:

@@ -55,8 +55,10 @@ def _search(led: Ledger, p, d, cpu_free) -> Tuple[jnp.ndarray, jnp.ndarray,
     FastPreferentialQueue._search_alloc_space."""
     starts, ends, sizes, n = led
     idx = jnp.arange(starts.shape[0])
-    cap_idx = jnp.searchsorted(starts, d)            # first start >= d
-    e_hi = jnp.searchsorted(ends, d)                 # count of ends < d
+    # the ledger is time-sorted (+BIG padded), so searchsorted == masked
+    # count — one vector reduce instead of a sequential bisect loop
+    cap_idx = jnp.sum((starts < d).astype(jnp.int32))  # first start >= d
+    e_hi = jnp.sum((ends < d).astype(jnp.int32))       # count of ends < d
 
     # interior gaps: position i (1..n-1) has a gap iff starts[i] > ends[i-1]
     prev_ends = jnp.concatenate([jnp.array([-BIG], jnp.float32), ends[:-1]])
@@ -116,47 +118,118 @@ def feasible_nodes(leds: Ledger, ps: jnp.ndarray, d: jnp.ndarray,
         leds, ps, cpu_frees)
 
 
+def insert_at(starts: jnp.ndarray, ends: jnp.ndarray, sizes: jnp.ndarray,
+              head, n, feasible, forced_ok, j, cap, p, cpu_free,
+              meta: Tuple[jnp.ndarray, ...] = (),
+              meta_vals: Tuple[jnp.ndarray, ...] = ()):
+    """Apply an admission on one ledger row at a pre-computed ``(j, cap)``
+    slot/window pair (the quantities :func:`_search` produces).
+
+    The single home of the closed-form Fig. 2c-d cascade: a feasible insert
+    right-aligns the new block at ``cap`` and left-shifts earlier blocks by
+    their cumulative slack; ``forced_ok`` appends plainly after the tail
+    (the host queue's forced push with ``forced_compaction=False`` — the
+    gap structure survives, the block runs late) and never moves earlier
+    blocks.  Rows may be *head-pointer* rows (retired prefix ``[0, head)``
+    holding -BIG/0; live blocks in ``[head, head + n)`` — the fleet
+    simulator's layout); ``head == 0`` is a plain :class:`Ledger` row.
+    ``meta`` is a tuple of per-slot (N,) arrays (e.g. request ids) that
+    ride through the same insertion shift, with ``meta_vals`` written into
+    the new slot.
+
+    Returns ``(starts, ends, sizes, admitted, meta)``; callers bump their
+    block count by ``admitted``.
+    """
+    N = starts.shape[0]
+    admitted = feasible | forced_ok
+    tail = head + n
+    tail_end = jnp.where(n > 0, ends[jnp.clip(tail - 1, 0, N - 1)], cpu_free)
+    jj = jnp.where(feasible, j, tail)
+    right = jnp.where(feasible, cap, tail_end + p)
+    new_start = right - p
+    idx = jnp.arange(N)
+
+    # cascade left-shift bound: work of blocks strictly between i and j
+    # (suffix sums of sizes[:j]) caps each earlier block's new end; a
+    # forced append never shifts
+    sz_before = jnp.where(idx < jj, sizes, 0.0)
+    between = jnp.sum(sz_before) - jnp.cumsum(sz_before)
+    bound = jnp.where(feasible, new_start - between, BIG)
+    new_ends = jnp.where(idx < jj, jnp.minimum(ends, bound), ends)
+    new_starts = jnp.where(idx < jj, new_ends - sizes, starts)
+    src = jnp.clip(idx - 1, 0, N - 1)          # entries >= j shift right
+
+    def ins(pre, at_j, orig):
+        out = jnp.where(idx < jj, pre,
+                        jnp.where(idx == jj, jnp.asarray(at_j, orig.dtype),
+                                  pre[src]))
+        return jnp.where(admitted, out, orig)
+
+    meta_out = tuple(ins(m, v, m) for m, v in zip(meta, meta_vals))
+    return (ins(new_starts, new_start, starts), ins(new_ends, right, ends),
+            ins(sizes, p, sizes), admitted, meta_out)
+
+
+def admit(led: Ledger, p: jnp.ndarray, d: jnp.ndarray, cpu_free: jnp.ndarray,
+          forced: jnp.ndarray = False, meta: Tuple[jnp.ndarray, ...] = (),
+          meta_vals: Tuple[jnp.ndarray, ...] = ()
+          ) -> Tuple[Ledger, jnp.ndarray, jnp.ndarray,
+                     Tuple[jnp.ndarray, ...]]:
+    """Generalized push: the host queue's full admission semantics.
+
+    Tries the feasible right-aligned insert first (identical to
+    :func:`push`); when that fails and ``forced`` is set, falls back to the
+    tail append — both applied through :func:`insert_at`, which the fleet
+    simulator also calls directly on its head-pointer rows with
+    pre-computed search results.
+
+    Returns ``(ledger, admitted, was_forced, meta)``.  A forced push on a
+    full ledger fails (``admitted == False``) — fixed-capacity arrays cannot
+    grow like the host's Python list; callers size ``capacity`` generously
+    and surface the overflow.
+    """
+    starts, ends, sizes, n = led
+    N = starts.shape[0]
+    has_room = n < N
+    ok, j, cap = _search(led, p, d, cpu_free)
+    ok = ok & has_room
+    was_forced = jnp.asarray(forced) & ~ok & has_room
+    new_starts, new_ends, new_sizes, admitted, meta_out = insert_at(
+        starts, ends, sizes, jnp.int32(0), n, ok, was_forced, j, cap, p,
+        cpu_free, meta, meta_vals)
+    out = Ledger(starts=new_starts, ends=new_ends, sizes=new_sizes,
+                 n=jnp.where(admitted, n + 1, n))
+    return out, admitted, was_forced, meta_out
+
+
 @jax.jit
 def push(led: Ledger, p: jnp.ndarray, d: jnp.ndarray,
          cpu_free: jnp.ndarray) -> Tuple[Ledger, jnp.ndarray]:
     """Admit if feasible; returns (new ledger, admitted flag).
 
     The cascade left-shift is closed-form: suffix work between each block
-    and the insertion point bounds its new end.
+    and the insertion point bounds its new end (see :func:`admit`, of which
+    this is the unforced, metadata-free special case).
     """
-    starts, ends, sizes, n = led
-    N = starts.shape[0]
-    ok, j, cap = _search(led, p, d, cpu_free)
-    ok = ok & (n < N)
-
-    new_start = cap - p
-    idx = jnp.arange(N)
-
-    # work of blocks strictly between i and j: suffix sums of sizes[:j]
-    sz_before_j = jnp.where(idx < j, sizes, 0.0)
-    total_before = jnp.sum(sz_before_j)
-    csum = jnp.cumsum(sz_before_j)                  # inclusive
-    between = total_before - csum                   # sum over (i, j)
-    bound = new_start - between
-    new_ends = jnp.where(idx < j, jnp.minimum(ends, bound), ends)
-    new_starts = jnp.where(idx < j, new_ends - sizes, starts)
-
-    # insert at j: entries >= j shift right by one
-    src = jnp.clip(idx - 1, 0, N - 1)
-    ins_starts = jnp.where(idx < j, new_starts,
-                           jnp.where(idx == j, new_start, new_starts[src]))
-    ins_ends = jnp.where(idx < j, new_ends,
-                         jnp.where(idx == j, cap, new_ends[src]))
-    ins_sizes = jnp.where(idx < j, sizes,
-                          jnp.where(idx == j, p, sizes[src]))
-
-    out = Ledger(
-        starts=jnp.where(ok, ins_starts, starts),
-        ends=jnp.where(ok, ins_ends, ends),
-        sizes=jnp.where(ok, ins_sizes, sizes),
-        n=jnp.where(ok, n + 1, n),
-    )
+    out, ok, _, _ = admit(led, p, d, cpu_free, forced=False)
     return out, ok
+
+
+@jax.jit
+def push_nodes(leds: Ledger, ps: jnp.ndarray, ds: jnp.ndarray,
+               cpu_frees: jnp.ndarray, forced: jnp.ndarray
+               ) -> Tuple[Ledger, jnp.ndarray, jnp.ndarray]:
+    """Stacked companion of :func:`push`/:func:`admit`: admit one request
+    per node into K stacked ledgers in a single device call.
+
+    ``leds`` holds stacked (K, N) arrays with a (K,) ``n``; ``ps``, ``ds``,
+    ``cpu_frees`` and ``forced`` are (K,).  Returns ``(ledgers, admitted,
+    was_forced)``.  Functionally pure — safe to wrap in a donated jit step.
+    """
+    def one(led, p, d, cf, f):
+        out, ok, wf, _ = admit(led, p, d, cf, forced=f)
+        return out, ok, wf
+    return jax.vmap(one)(leds, ps, ds, cpu_frees, forced)
 
 
 @jax.jit

@@ -1,0 +1,35 @@
+"""repro.fleetsim — device-resident, vmappable fleet simulator.
+
+The event-heap :class:`~repro.orchestration.orchestrator.Orchestrator`
+is the semantic reference; this package is the same strategy as stacked
+``(num_nodes, capacity)`` ledger tensors scanned end-to-end in JAX, built
+for million-request sweeps: one :func:`simulate` call jits whole, and
+``vmap`` over :class:`SimParams` / stacked request tensors turns a full
+(scenario x policy x seed) table into a single device call.
+
+    from repro.fleetsim import SimParams, simulate, scenario_arrays
+    from repro.fleetsim import topology_arrays
+    from repro.orchestration import Topology, get_workload
+
+    reqs, names = scenario_arrays(get_workload("paper/scenario1"), seed=0)
+    topo = topology_arrays(Topology.full_mesh(3))
+    m = simulate(reqs, topo, SimParams.make(seed=0), policy="least_loaded")
+    print(float(m.met_rate), int(m.forwards))
+
+Equivalence with the event heap is cross-validated in
+:mod:`repro.fleetsim.validate` (exact for deterministic policies, exact
+under forwarding-trace replay otherwise — DESIGN.md §5).
+"""
+from repro.fleetsim.arrays import (RequestArrays, TopologyArrays,
+                                   pack_requests, scenario_arrays,
+                                   topology_arrays)
+from repro.fleetsim.core import (DISCARDED, LATE, MET, OVERFLOW, PENDING,
+                                 POLICIES, FleetMetrics, SimParams, simulate,
+                                 simulate_fn)
+
+__all__ = [
+    "RequestArrays", "TopologyArrays", "pack_requests", "scenario_arrays",
+    "topology_arrays",
+    "FleetMetrics", "SimParams", "simulate", "simulate_fn", "POLICIES",
+    "PENDING", "MET", "LATE", "DISCARDED", "OVERFLOW",
+]

@@ -1,0 +1,459 @@
+"""Device-resident fleet simulator: the whole deadline-aware admission +
+sequential-forwarding strategy compiled end-to-end in JAX.
+
+The event-heap :class:`~repro.orchestration.orchestrator.Orchestrator`
+walks a Python heap; this module replays the *same* strategy as one
+``lax.scan`` over the arrival-sorted request tensor, with the entire fleet
+held as stacked ``(num_nodes, capacity)`` ledger arrays (the
+:class:`~repro.core.jax_queue.Ledger` geometry plus per-slot absolute
+deadlines and request ids) next to per-node ``head``/``busy_until``/
+``load`` vectors.  One scan step = one request:
+
+1. **fast-forward** — a masked ``while_loop`` retires every completion due
+   strictly before the arrival (the CPU model is work-conserving, so the
+   pop chain between two arrivals is deterministic).  Rows are
+   *head-pointer* ledgers: a pop clears one slot (start/end to -BIG, size
+   to 0 — which keeps the whole row time-sorted and every count /
+   prefix-sum valid) and bumps ``head``, so retiring costs O(nodes)
+   scatters instead of shifting the (num_nodes, capacity) block;
+2. **forward chain** — ``max_forwards`` is static, so the paper's
+   sequential forwarding unrolls into the `M+1` candidate nodes, computed
+   *speculatively* before any admission test (routing depends only on
+   loads / rng / the trace row — never on mid-chain ledger state, which
+   cannot change until a request is admitted; the round-robin pointer is
+   resolved afterwards from the realized forward count).  The candidates'
+   ledger rows are gathered once and scored by a single vectorized
+   feasibility pass (:func:`repro.kernels.ref.fleet_search_ref`, the same
+   math as the Pallas fleet-feasibility kernel), and the stop position is
+   one ``argmax`` over the feasible/exhausted mask;
+3. **apply** — feasible insert at the pre-computed (slot, window) pair,
+   forced tail-append, or discard as ``where``-selects; an idle CPU
+   short-circuits the insert (the host engine pushes then immediately
+   pops — the net effect is starting the request at ``t``).
+
+Because nothing escapes the device, :func:`simulate` jits whole and
+``vmap``s over seeds and policy parameters (``SimParams``): a full paper
+table — scenarios x policies x seeds — is one device call.  Equivalence
+with the event heap is exact for deterministic policies and exact under
+forwarding-trace replay for the stochastic ones (tie-break contract in
+DESIGN.md §5; cross-validated in fleetsim/validate.py and
+tests/test_fleetsim.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jax_queue as jq
+from repro.fleetsim.arrays import RequestArrays, TopologyArrays
+from repro.kernels import ref as kref
+
+POLICIES = ("random", "power_of_two", "least_loaded", "round_robin",
+            "batched_feasible", "trace")
+
+# outcome codes (per request)
+PENDING, MET, LATE, DISCARDED, OVERFLOW = 0, 1, 2, 3, 4
+
+_MET_EPS = 1e-9          # same slack as Request.met_deadline
+
+
+class SimParams(NamedTuple):
+    """Traced sweep axes: everything here can carry a vmap dimension."""
+    seed: jnp.ndarray                  # i32 — forwarding rng stream
+    sla_scale: jnp.ndarray             # f32 — multiplies relative deadlines
+
+    @classmethod
+    def make(cls, seed: int = 0, sla_scale: float = 1.0) -> "SimParams":
+        return cls(seed=jnp.asarray(seed, jnp.int32),
+                   sla_scale=jnp.asarray(sla_scale, jnp.float32))
+
+
+class FleetState(NamedTuple):
+    # stacked head-pointer ledgers: (K, N) block geometry + per-slot request
+    # identity; live blocks of node k occupy columns [head[k], head[k]+nq[k])
+    starts: jnp.ndarray
+    ends: jnp.ndarray
+    sizes: jnp.ndarray
+    slot_rid: jnp.ndarray              # dense request index per block (i32)
+    head: jnp.ndarray                  # (K,) i32 retired-slot count
+    nq: jnp.ndarray                    # (K,) i32 live block count
+    busy: jnp.ndarray                  # (K,) time the CPU frees
+    load: jnp.ndarray                  # (K,) pending ledger work (= host
+    #                                     queue.pending_work(), active excl.)
+    rr: jnp.ndarray                    # () i32 round-robin pointer
+    # the one (R,) carry: completion times scattered at pop time (pops hit
+    # arbitrary earlier requests, so this cannot ride the scan's stacked
+    # outputs like every per-request decision does)
+    completion: jnp.ndarray
+
+
+class FleetMetrics(NamedTuple):
+    """Headline aggregates + the per-request arrays they reduce."""
+    total: jnp.ndarray
+    processed: jnp.ndarray
+    met_deadline: jnp.ndarray
+    forwards: jnp.ndarray
+    discarded: jnp.ndarray
+    overflow: jnp.ndarray            # forced pushes dropped: no free slot
+    window_saturation: jnp.ndarray   # requests that consulted a full live
+    #                                  window — admission may diverge from
+    #                                  the host's unbounded queue; keep 0
+    mean_response_time: jnp.ndarray
+    end_time: jnp.ndarray
+    outcome: jnp.ndarray
+    completion: jnp.ndarray
+    served_by: jnp.ndarray
+    forwards_used: jnp.ndarray
+
+    @property
+    def met_rate(self):
+        return self.met_deadline / jnp.maximum(1, self.total)
+
+
+# ---------------------------------------------------------------------------
+# fast-forward: retire completions due strictly before t (work-conserving
+# pop chain), recording outcomes by slot rid.  Also the drain loop (t=inf).
+# ---------------------------------------------------------------------------
+def _retire(state: FleetState, t, R: int) -> FleetState:
+    K, N = state.starts.shape
+    rows = jnp.arange(K)
+
+    def cond(s):
+        return jnp.any((s.busy < t) & (s.nq > 0))
+
+    def body(s):
+        mask = (s.busy < t) & (s.nq > 0)
+        h = jnp.minimum(s.head, N - 1)
+        head_size = s.sizes[rows, h]
+        new_busy = jnp.where(mask, s.busy + head_size, s.busy)
+        rid = jnp.where(mask, s.slot_rid[rows, h], R)   # R => dropped
+
+        def clear(a, v):
+            return a.at[rows, h].set(jnp.where(mask, v, a[rows, h]))
+
+        return s._replace(
+            # -BIG keeps the retired prefix below every live value, so the
+            # row stays globally sorted and counts/prefix sums stay valid
+            starts=clear(s.starts, -jq.BIG),
+            ends=clear(s.ends, -jq.BIG),
+            sizes=clear(s.sizes, 0.0),
+            head=s.head + mask,
+            nq=s.nq - mask,
+            busy=new_busy,
+            load=s.load - jnp.where(mask, head_size, 0.0),
+            completion=s.completion.at[rid].set(new_busy, mode="drop"),
+        )
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+# ---------------------------------------------------------------------------
+# routing policies: pure selects over (load, adjacency, rng, trace row).
+# The whole candidate chain is speculative — routing never reads ledger
+# state (except batched_feasible's request-start mask, which is frozen for
+# the chain since nothing mutates before an admission) — so it runs before
+# the single fused feasibility pass.
+# ---------------------------------------------------------------------------
+def _route_next(policy: str, topo: TopologyArrays, load, cur, key, hop: int,
+                tgt_row, feas_all, rr):
+    """Forwarding target of ``cur``; returns (next_node, advanced_rr).
+
+    Consulted speculatively for every hop — callers resolve which hops
+    really happened afterwards (the rr pointer by realized forward count).
+    """
+    deg = topo.degree[cur]
+    K = topo.adj.shape[0]
+    if policy == "trace":
+        return jnp.maximum(tgt_row[hop], 0), rr
+    if policy == "round_robin":
+        # stable-id pointer: probe rr, rr+1, ... (mod K), skip non-neighbors;
+        # the pointer advances past the chosen probe (host Router semantics)
+        offs = jnp.arange(K)
+        cands = (rr + offs) % K
+        off = jnp.argmax(topo.adj[cur][cands])
+        return cands[off], (rr + off + 1) % K
+    if policy == "least_loaded":
+        # deterministic variant: ties break to the lowest node id (the host
+        # router flips a coin; documented in DESIGN.md §5)
+        return jnp.argmin(jnp.where(topo.adj[cur], load, jnp.inf)), rr
+    if policy == "batched_feasible":
+        # least-loaded neighbor that can still admit (cross-node mask from
+        # the fused feasibility kernel); least-loaded fallback when nobody
+        # can — identical tie-breaking to the host router (lowest id)
+        ok = topo.adj[cur] & feas_all
+        best_ok = jnp.argmin(jnp.where(ok, load, jnp.inf))
+        best_any = jnp.argmin(jnp.where(topo.adj[cur], load, jnp.inf))
+        return jnp.where(jnp.any(ok), best_ok, best_any), rr
+    kh = jax.random.fold_in(key, hop)
+    if policy == "random":
+        u = jax.random.uniform(kh)
+        pick = jnp.minimum((u * deg).astype(jnp.int32),
+                           jnp.maximum(deg - 1, 0))
+        return topo.neighbors[cur, pick], rr
+    if policy == "power_of_two":
+        k1, k2 = jax.random.split(kh)
+        i1 = jnp.minimum((jax.random.uniform(k1) * deg).astype(jnp.int32),
+                         jnp.maximum(deg - 1, 0))
+        i2 = jnp.minimum(
+            (jax.random.uniform(k2) * (deg - 1)).astype(jnp.int32),
+            jnp.maximum(deg - 2, 0))
+        i2 = jnp.where(i2 >= i1, i2 + 1, i2)        # sample w/o replacement
+        a = topo.neighbors[cur, i1]
+        b = topo.neighbors[cur, jnp.minimum(i2, jnp.maximum(deg - 1, 0))]
+        two = jnp.where(load[a] <= load[b], a, b)
+        return jnp.where(deg <= 1, topo.neighbors[cur, 0], two), rr
+    raise ValueError(f"unknown fleetsim policy {policy!r}; "
+                     f"options: {sorted(POLICIES)}")
+
+
+# ---------------------------------------------------------------------------
+# the scan step: one request end-to-end (fast-forward, chain, apply)
+# ---------------------------------------------------------------------------
+def _step(state: FleetState, x, *, topo: TopologyArrays, key, policy: str,
+          max_forwards: int, discard_on_exhaust: bool, capacity: int,
+          depth: int, use_pallas: bool, R: int) -> FleetState:
+    i, t, p, drel, origin, tgt_row = x
+    d = t + drel
+    W = depth
+    state = _retire(state, t, R)
+    ps = p / topo.speeds                                    # (K,) scaled
+    cpu_free = jnp.maximum(t, state.busy)
+
+    feas_all = None
+    if policy == "batched_feasible":
+        # whole-fleet mask over each node's live window (one gather): this
+        # is the Pallas fleet-feasibility kernel's slot in the step
+        w0_all = jnp.clip(state.head, 0, capacity - W)
+        cols = w0_all[:, None] + jnp.arange(W)[None, :]
+        win_all = lambda a: jnp.take_along_axis(a, cols, axis=1)
+        hrel_all = state.head - w0_all
+        if use_pallas:
+            from repro.kernels import ops as kops
+            feas_all, _ = kops.fleet_feasibility(
+                win_all(state.starts), win_all(state.ends),
+                win_all(state.sizes), state.nq, ps, d, cpu_free, hrel_all)
+        else:
+            feas_all, _, _, _ = kref.fleet_search_ref(
+                win_all(state.starts), win_all(state.ends),
+                win_all(state.sizes), state.nq, ps, d, cpu_free, hrel_all)
+
+    # speculative candidate chain: v[h] is where the request would sit
+    # after h forwards; the rr pointer is resolved by the realized count
+    kreq = jax.random.fold_in(key, i)
+    vs, rrs = [origin], [state.rr]
+    cur, rr = origin, state.rr
+    for hop in range(max_forwards):
+        cur, rr = _route_next(policy, topo, state.load, cur, kreq, hop,
+                              tgt_row, feas_all, rr)
+        vs.append(cur)
+        rrs.append(rr)
+    v = jnp.stack(vs)                                       # (H,)
+    rr_stack = jnp.stack(rrs)
+
+    # gather each candidate's live window [w0, w0 + W) — all math below is
+    # depth-wide, not buffer-wide (the retired prefix beyond the window is
+    # dead weight the scan never has to touch again)
+    w0 = jnp.clip(state.head[v], 0, capacity - W)
+    head_rel = state.head[v] - w0
+
+    def win(buf, h):
+        return jax.lax.dynamic_slice(buf[v[h]], (w0[h],), (W,))
+
+    H = max_forwards + 1
+    starts_w = jnp.stack([win(state.starts, h) for h in range(H)])
+    ends_w = jnp.stack([win(state.ends, h) for h in range(H)])
+    sizes_w = jnp.stack([win(state.sizes, h) for h in range(H)])
+
+    # one fused feasibility + geometry pass over the candidates' windows
+    # (the window-full check doubles as the buffer-room check: w0 clamps to
+    # capacity - W, so tail_rel == W <=> head + nq == capacity)
+    ok, j, cap, _ = kref.fleet_search_ref(
+        starts_w, ends_w, sizes_w, state.nq[v], ps[v], d, cpu_free[v],
+        head_rel)
+
+    # stop position: first candidate that admits or exhausts the chain
+    # (degree 0 exhausts early; the M-th hop always stops)
+    exh = (topo.degree[v] == 0).at[max_forwards].set(True)
+    h_star = jnp.argmax(ok | exh)
+    feas_at = ok[h_star]
+    dst = v[h_star]
+    w0_d = w0[h_star]
+    nfwd = h_star
+    discarded = ~feas_at & discard_on_exhaust
+    forced_req = ~feas_at & (not discard_on_exhaust)
+    state = state._replace(rr=rr_stack[nfwd])
+
+    # apply at dst, within its window (jax_queue.insert_at — the shared
+    # closed-form cascade — with the pre-computed search results)
+    room = head_rel[h_star] + state.nq[dst] < W
+    forced_ok = forced_req & room
+    ovf = forced_req & ~room
+    # a consulted candidate whose live window is exhausted can diverge from
+    # the host's unbounded queue even on the feasible path (its admission
+    # test reports "no room" where the host might admit) — surface it
+    sat = jnp.any((head_rel + state.nq[v] >= W)
+                  & (jnp.arange(max_forwards + 1) <= h_star))
+    idle = state.busy[dst] < t
+    sr_w = jax.lax.dynamic_slice(state.slot_rid[dst], (w0_d,), (W,))
+    n_starts, n_ends, n_sizes, admitted, (n_sr,) = jq.insert_at(
+        starts_w[h_star], ends_w[h_star], sizes_w[h_star],
+        head_rel[h_star], state.nq[dst], feas_at, forced_ok,
+        j[h_star], cap[h_star], ps[dst], cpu_free[dst],
+        meta=(sr_w,), meta_vals=(i,))
+
+    # idle CPU: the host engine pushes then immediately pops — net effect is
+    # the request starts at t and never enters the ledger
+    start_now = admitted & idle
+    queue_it = admitted & ~idle
+    c_now = t + ps[dst]
+
+    def put(buf, new, old):
+        return jax.lax.dynamic_update_slice(
+            buf, jnp.where(queue_it, new, old)[None, :], (dst, w0_d))
+
+    state = state._replace(
+        starts=put(state.starts, n_starts, starts_w[h_star]),
+        ends=put(state.ends, n_ends, ends_w[h_star]),
+        sizes=put(state.sizes, n_sizes, sizes_w[h_star]),
+        slot_rid=put(state.slot_rid, n_sr, sr_w),
+        nq=state.nq.at[dst].add(queue_it.astype(jnp.int32)),
+        load=state.load.at[dst].add(jnp.where(queue_it, ps[dst], 0.0)),
+        busy=state.busy.at[dst].set(
+            jnp.where(start_now, c_now, state.busy[dst])),
+    )
+    # everything keyed by the *current* request rides the scan's stacked
+    # outputs — only pop-time completions need the (R,) carry
+    y = (jnp.where(admitted, dst, -1), discarded, ovf, start_now,
+         jnp.where(start_now, c_now, 0.0), nfwd, sat)
+    return state, y
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("policy", "max_forwards", "discard_on_exhaust",
+                              "capacity", "depth", "use_pallas"))
+def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
+              targets: jnp.ndarray, *, policy: str, max_forwards: int,
+              discard_on_exhaust: bool, capacity: int, depth: int,
+              use_pallas: bool) -> FleetMetrics:
+    R = reqs.arrival.shape[0]
+    K = topo.speeds.shape[0]
+    N = capacity
+    dt = reqs.arrival.dtype
+    state = FleetState(
+        starts=jnp.full((K, N), jq.BIG, dt),
+        ends=jnp.full((K, N), jq.BIG, dt),
+        sizes=jnp.zeros((K, N), dt),
+        slot_rid=jnp.zeros((K, N), jnp.int32),
+        head=jnp.zeros((K,), jnp.int32),
+        nq=jnp.zeros((K,), jnp.int32),
+        busy=jnp.zeros((K,), dt),
+        load=jnp.zeros((K,), dt),
+        rr=jnp.zeros((), jnp.int32),
+        completion=jnp.zeros((R,), dt),
+    )
+    key = jax.random.PRNGKey(params.seed)
+    step = functools.partial(
+        _step, topo=topo, key=key, policy=policy, max_forwards=max_forwards,
+        discard_on_exhaust=discard_on_exhaust, capacity=capacity,
+        depth=depth, use_pallas=use_pallas, R=R)
+    d_abs = reqs.arrival + reqs.rel_deadline * params.sla_scale
+    xs = (jnp.arange(R, dtype=jnp.int32), reqs.arrival, reqs.proc,
+          reqs.rel_deadline * params.sla_scale, reqs.origin, targets)
+    state, ys = jax.lax.scan(step, state, xs)
+    state = _retire(state, jnp.asarray(jnp.inf, dt), R)     # drain
+
+    served_by, disc, ovf, start_now, c_now, nfwd, sat = ys
+    completion = jnp.where(start_now, c_now, state.completion)
+    has_c = completion > 0
+    met = has_c & (completion <= d_abs + _MET_EPS)
+    outcome = jnp.where(
+        disc, DISCARDED,
+        jnp.where(ovf, OVERFLOW,
+                  jnp.where(met, MET, jnp.where(has_c, LATE, PENDING))))
+    n_proc = jnp.sum(has_c)
+    resp = jnp.sum(jnp.where(has_c, completion - reqs.arrival, 0.0))
+    last_arrival = jnp.max(reqs.arrival, initial=0.0)
+    end_time = jnp.maximum(jnp.max(completion, initial=0.0), last_arrival)
+    return FleetMetrics(
+        total=jnp.int32(R),
+        processed=n_proc.astype(jnp.int32),
+        met_deadline=jnp.sum(met).astype(jnp.int32),
+        forwards=jnp.sum(nfwd).astype(jnp.int32),
+        discarded=jnp.sum(disc).astype(jnp.int32),
+        overflow=jnp.sum(ovf).astype(jnp.int32),
+        window_saturation=jnp.sum(sat).astype(jnp.int32),
+        mean_response_time=resp / jnp.maximum(1, n_proc),
+        end_time=end_time,
+        outcome=outcome,
+        completion=completion,
+        served_by=served_by,
+        forwards_used=nfwd,
+    )
+
+
+def simulate(reqs: RequestArrays, topo: TopologyArrays,
+             params: Optional[SimParams] = None, *, policy: str = "random",
+             max_forwards: int = 2, discard_on_exhaust: bool = False,
+             capacity: int = 256, depth: Optional[int] = None,
+             targets: Optional[jnp.ndarray] = None,
+             use_pallas: bool = False) -> FleetMetrics:
+    """Run the full fleet simulation as one device call.
+
+    ``reqs``/``topo`` come from :mod:`repro.fleetsim.arrays` (or
+    ``Workload.to_arrays()``); ``params`` carries the traced sweep axes.
+    For (seeds x thresholds) sweeps, vmap :func:`simulate_fn` — every array
+    argument takes a leading batch dimension, nothing leaves the device
+    between sweep points.  ``capacity`` is the per-node slot-buffer width;
+    each block occupies one slot for the whole run (head-pointer rows), so
+    size it at the node's total admission count, not its peak depth.
+    ``depth`` (default ``capacity``) is the live-window width the per-step
+    math runs over — size it at peak queue depth + slack; smaller depth =
+    faster steps.  Undersizing is never silent: a forced push that finds
+    no free slot is reported in ``metrics.overflow``, and any request that
+    merely *consulted* a node with an exhausted window (where the
+    admission verdict could differ from the host's unbounded queue) counts
+    into ``metrics.window_saturation`` — size capacity/depth so both stay
+    0.  ``targets`` replays recorded forwarding choices (policy="trace",
+    shape (R, max_forwards)).
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown fleetsim policy {policy!r}; "
+                         f"options: {sorted(POLICIES)}")
+    params = params if params is not None else SimParams.make()
+    reqs = RequestArrays(*(jnp.asarray(a) for a in reqs))
+    topo = TopologyArrays(*(jnp.asarray(a) for a in topo))
+    if targets is None:
+        targets = jnp.full((reqs.arrival.shape[0], max(max_forwards, 1)),
+                           -1, jnp.int32)
+    depth = capacity if depth is None else min(depth, capacity)
+    return _simulate(reqs, topo, params, jnp.asarray(targets, jnp.int32),
+                     policy=policy, max_forwards=max_forwards,
+                     discard_on_exhaust=discard_on_exhaust,
+                     capacity=capacity, depth=depth, use_pallas=use_pallas)
+
+
+def simulate_fn(*, policy: str = "random", max_forwards: int = 2,
+                discard_on_exhaust: bool = False, capacity: int = 256,
+                depth: Optional[int] = None, use_pallas: bool = False):
+    """The jitted simulator with statics bound — the thing to ``jax.vmap``.
+
+    Signature of the returned function:
+    ``(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
+    targets: (R, max_forwards) i32) -> FleetMetrics``; map any subset of
+    arguments, e.g.::
+
+        run = fleetsim.simulate_fn(policy="least_loaded")
+        sweep = jax.vmap(run, in_axes=(None, None, SimParams(0, None), None))
+        metrics = sweep(reqs, topo, SimParams.make(jnp.arange(32), 1.0), tgt)
+    """
+    return functools.partial(
+        _simulate, policy=policy, max_forwards=max_forwards,
+        discard_on_exhaust=discard_on_exhaust, capacity=capacity,
+        depth=capacity if depth is None else min(depth, capacity),
+        use_pallas=use_pallas)

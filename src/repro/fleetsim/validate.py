@@ -1,0 +1,186 @@
+"""Cross-validation: fleetsim vs the event-heap Orchestrator.
+
+The contract (DESIGN.md §5): on identical workloads the scan-based fleet
+simulator reproduces the event heap's per-request outcomes
+
+* **exactly** for deterministic forwarding policies (``round_robin``,
+  ``batched_feasible``), and
+* **exactly under trace replay** for the stochastic ones — the host run
+  records every forwarding choice through ``Hooks.on_forward`` and
+  fleetsim replays it (``policy="trace"``), so any dynamics divergence
+  (admission, timing, tie-breaking) still surfaces as an outcome mismatch
+  while the Mersenne-vs-threefry rng stream difference is factored out,
+
+modulo float32-boundary flips: the host queue schedules in float64, the
+device ledger in float32, so a request whose feasibility / deadline margin
+is below f32 resolution (~1e-2 at the paper's 1e5-UT timescale) can land
+on the other side of the test.  Empirically this is rare (see
+EXPERIMENTS.md §Fleetsim); ``run_validation`` reports exact counts and the
+per-request mismatch list so the tolerance is measured, not assumed.
+
+    PYTHONPATH=src python -m repro.fleetsim.validate            # 3 scenarios
+    PYTHONPATH=src python -m repro.fleetsim.validate --policy round_robin
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.block_queue import FastPreferentialQueue
+from repro.fleetsim import core as fcore
+from repro.fleetsim.arrays import pack_requests, topology_arrays
+from repro.orchestration import (Hooks, Orchestrator, Router, Topology,
+                                 Workload, get_workload)
+
+# host policies fleetsim replays move-for-move without a trace
+DETERMINISTIC = ("round_robin", "batched_feasible")
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    scenario: str
+    seed: int
+    policy: str
+    total: int
+    host: Dict[str, float]
+    fleet: Dict[str, float]
+    outcome_mismatches: int          # per-request outcome-code disagreements
+    met_diff_pp: float               # |met-rate difference| in percent points
+    capacity: int
+
+    @property
+    def exact(self) -> bool:
+        return self.outcome_mismatches == 0
+
+    def row(self) -> str:
+        tag = "exact" if self.exact else \
+            f"{self.outcome_mismatches} mismatches"
+        return (f"{self.scenario:18s} seed={self.seed} {self.policy:16s} "
+                f"met {self.host['met_deadline']:6.0f}/{self.fleet['met_deadline']:6.0f} "
+                f"fwd {self.host['forwards']:6.0f}/{self.fleet['forwards']:6.0f} "
+                f"disc {self.host['discarded']:5.0f}/{self.fleet['discarded']:5.0f} "
+                f"dmet {self.met_diff_pp:5.3f}pp  [{tag}]")
+
+
+def _host_run(workload: Workload, topology: Topology, seed: int,
+              policy: str, max_forwards: int, discard_on_exhaust: bool):
+    """Event-heap reference run; returns (requests, result, targets, depth).
+
+    ``targets[dense_idx, hop]`` records every forwarding choice in the
+    order the heap consumed it; ``peak`` is the largest per-node admission
+    count, which sizes the fleet slot buffer (head-pointer rows retire
+    slots without reusing them, so capacity tracks total admissions, not
+    peak depth).
+    """
+    requests = workload.generate(seed)
+    idx = {r.rid: j for j, r in enumerate(requests)}
+    targets = np.full((len(requests), max(max_forwards, 1)), -1, np.int32)
+    hops = {}
+    depth = 0
+
+    def on_forward(req, src, dst, now):
+        h = hops.get(req.rid, 0)
+        hops[req.rid] = h + 1
+        targets[idx[req.rid], h] = dst.node_id
+
+    def on_admit(req, node, now, forced):
+        nonlocal depth
+        depth = max(depth, len(node.queue))
+
+    orch = Orchestrator(topology, FastPreferentialQueue,
+                        Router(topology, policy, seed=seed),
+                        max_forwards=max_forwards,
+                        discard_on_exhaust=discard_on_exhaust,
+                        hooks=Hooks(on_forward=on_forward,
+                                    on_admit=on_admit))
+    result = orch.run(requests)
+    peak = max(n.admitted for n in result.per_node)
+    return requests, result, targets, peak, depth
+
+
+def _host_outcomes(requests, result) -> np.ndarray:
+    out = np.full((len(requests),), fcore.DISCARDED, np.int32)
+    idx = {r.rid: j for j, r in enumerate(requests)}
+    for r in result.completed:
+        out[idx[r.rid]] = fcore.MET if r.met_deadline else fcore.LATE
+    return out
+
+
+def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
+                   policy: str = "random", max_forwards: int = 2,
+                   discard_on_exhaust: bool = False,
+                   topology: Optional[Topology] = None,
+                   capacity: Optional[int] = None) -> ValidationReport:
+    """One (scenario, seed, policy) cross-validation cell."""
+    workload = get_workload(scenario) if isinstance(scenario, str) \
+        else scenario
+    name = scenario if isinstance(scenario, str) else workload.name
+    topology = topology or Topology.full_mesh(workload.n_nodes)
+    requests, result, targets, peak, depth = _host_run(
+        workload, topology, seed, policy, max_forwards, discard_on_exhaust)
+
+    if capacity is None:
+        capacity = 1 << max(3, (peak + 2 - 1).bit_length())
+    window = 1 << max(3, (depth + 2 - 1).bit_length())
+    reqs, _, _ = pack_requests(requests)
+    fleet_policy = policy if policy in DETERMINISTIC else "trace"
+    m = fcore.simulate(reqs, topology_arrays(topology), fcore.SimParams.make(seed),
+                       policy=fleet_policy, max_forwards=max_forwards,
+                       discard_on_exhaust=discard_on_exhaust,
+                       capacity=capacity, depth=window, targets=targets)
+    assert int(m.overflow) == 0 and int(m.window_saturation) == 0, \
+        f"fleet capacity {capacity}/depth {window} saturated " \
+        f"(host peak admissions {peak}, depth {depth})"
+
+    host_out = _host_outcomes(requests, result)
+    mismatches = int(np.sum(host_out != np.asarray(m.outcome)))
+    total = len(requests)
+    host = dict(met_deadline=result.met_deadline, processed=result.processed,
+                forwards=result.forwards, discarded=result.discarded,
+                mean_response_time=result.mean_response_time)
+    fleet = dict(met_deadline=int(m.met_deadline), processed=int(m.processed),
+                 forwards=int(m.forwards), discarded=int(m.discarded),
+                 mean_response_time=float(m.mean_response_time))
+    return ValidationReport(
+        scenario=name, seed=seed, policy=policy, total=total,
+        host=host, fleet=fleet, outcome_mismatches=mismatches,
+        met_diff_pp=100.0 * abs(host["met_deadline"]
+                                - fleet["met_deadline"]) / max(1, total),
+        capacity=capacity)
+
+
+def main() -> List[ValidationReport]:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", nargs="*", default=[
+        "paper/scenario1", "paper/scenario2", "paper/scenario3"])
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--policy", default="random")
+    ap.add_argument("--discard", action="store_true")
+    args = ap.parse_args()
+    reports = []
+    for sc in args.scenarios:
+        for seed in range(args.seeds):
+            rep = run_validation(sc, seed, policy=args.policy,
+                                 discard_on_exhaust=args.discard)
+            reports.append(rep)
+            print(rep.row(), flush=True)
+    worst = max(r.met_diff_pp for r in reports)
+    n_exact = sum(r.exact for r in reports)
+    violations = [r for r in reports
+                  if r.met_diff_pp > 0.5
+                  or r.outcome_mismatches > 0.005 * r.total]
+    print(f"# {n_exact}/{len(reports)} cells exact; "
+          f"worst met-rate delta {worst:.3f}pp "
+          f"(contract: exact or <= 0.5pp, DESIGN.md §5)")
+    if violations:
+        raise SystemExit(
+            f"equivalence contract violated in {len(violations)} cell(s): "
+            + "; ".join(v.row() for v in violations))
+    return reports
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Pallas kernel: cross-node ledger feasibility scan over a whole fleet.
+
+The fleet simulator's hot inner step asks, for ONE request, "which of the
+K nodes' admission ledgers can still fit it before its deadline?" — the
+generalized :func:`repro.core.jax_queue.feasible_nodes` over stacked
+``(num_nodes, capacity)`` arrays.  Per node that is two bisects plus a
+prefix sum; over a fleet it is a bandwidth-bound scan of the stacked
+ledger, so the kernel fuses it with the router's load reduction (pending
+work per node) in one VMEM pass: each grid program loads a
+``(block_nodes, capacity)`` tile of the fleet ledger once and emits both
+the feasibility bit and the load for its nodes.  The two searchsorted
+calls of the per-node test become masked count-reductions (the ledgers
+are time-sorted, so ``searchsorted(xs, d) == sum(xs < d)``), which is
+what makes the scan one vectorized pass instead of a bisect per node.
+
+Pure-jnp oracle: :func:`repro.kernels.ref.fleet_feasibility_ref`.  On
+non-TPU backends the wrapper in :mod:`repro.kernels.ops` runs this body
+in interpret mode (traced once under jit, so it lowers to ordinary XLA —
+the CPU fallback costs nothing at runtime).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+
+def _fleet_feasibility_kernel(d_ref, starts_ref, ends_ref, sizes_ref, n_ref,
+                              head_ref, ps_ref, free_ref, feas_ref, load_ref,
+                              *, eps: float):
+    d = d_ref[0, 0]
+    starts = starts_ref[...]                     # (bk, N)
+    ends = ends_ref[...]
+    sizes = sizes_ref[...]
+    n = n_ref[...]                               # (bk, 1) int32
+    head = head_ref[...]                         # (bk, 1) int32
+    ps = ps_ref[...]                             # (bk, 1)
+    free = free_ref[...]                         # (bk, 1)
+    bk, N = starts.shape
+    tail = head + n
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bk, N), 1)
+
+    # searchsorted on a sorted ledger == masked count (one vector reduce).
+    # Retired slots [0, head) hold -BIG/0 and count into both sums
+    # identically, so the straddle comparison stays consistent.
+    cap_idx = jnp.sum((starts < d).astype(jnp.int32), axis=1, keepdims=True)
+    e_hi = jnp.sum((ends < d).astype(jnp.int32), axis=1, keepdims=True)
+
+    # interior gaps: live position i has a gap iff starts[i] > ends[i-1]
+    prev_ends = jnp.concatenate(
+        [jnp.full((bk, 1), -BIG, ends.dtype), ends[:, :-1]], axis=1)
+    has_gap = (starts > prev_ends) & (idx >= head + 1) & (idx < tail)
+    gap_ok = has_gap & (idx <= e_hi)
+    prev_gap = jnp.max(jnp.where(gap_ok, idx, head), axis=1, keepdims=True)
+
+    no_straddle = e_hi >= cap_idx
+    j = jnp.where(no_straddle, e_hi, prev_gap)
+    j_clip = jnp.minimum(j, N - 1)
+    start_j = jnp.sum(jnp.where(idx == j_clip, starts, 0.0), axis=1,
+                      keepdims=True)
+    start_j = jnp.where(j < tail, start_j, BIG)
+    cap = jnp.where(no_straddle, d, jnp.minimum(start_j, d))
+    # j == head straddle fallback: front window
+    start_h = jnp.sum(jnp.where(idx == jnp.minimum(head, N - 1), starts, 0.0),
+                      axis=1, keepdims=True)
+    start_h = jnp.where(n > 0, start_h, BIG)
+    front = (~no_straddle) & (prev_gap == head)
+    cap = jnp.where(front, jnp.minimum(start_h, d), cap)
+    j = jnp.where(front, head, j)
+
+    pw_j = jnp.sum(jnp.where(idx < j, sizes, 0.0), axis=1, keepdims=True)
+    feasible = (cap - (free + pw_j) >= ps - eps) & (cap > free) & (tail < N)
+    feas_ref[...] = feasible.astype(jnp.int32)
+    load_ref[...] = jnp.sum(sizes, axis=1, keepdims=True)
+
+
+def fleet_feasibility_fwd(starts: jnp.ndarray, ends: jnp.ndarray,
+                          sizes: jnp.ndarray, n: jnp.ndarray,
+                          ps: jnp.ndarray, d: jnp.ndarray,
+                          cpu_free: jnp.ndarray, head=None, *,
+                          eps: float = 1e-6, block_nodes: int = 8,
+                          interpret: bool = True
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stacked (K, N) ledger arrays -> ((K,) feasible bool, (K,) load).
+
+    ``ps`` is the request's per-node speed-scaled processing time, ``d`` its
+    absolute deadline (scalar), ``cpu_free`` the per-node CPU-free time.
+    ``head`` marks retired slots (fleetsim head-pointer rows; default 0 ==
+    plain Ledger).  A full node (``head + n == capacity``) is infeasible.
+    """
+    K, N = starts.shape
+    block_nodes = min(block_nodes, K)
+    grid = -(-K // block_nodes)
+    pad = grid * block_nodes - K
+
+    def pad_rows(x, fill):
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                       constant_values=fill) if pad else x
+
+    dtype = starts.dtype
+    d2 = jnp.asarray(d, dtype).reshape(1, 1)
+    col = lambda x, f: pad_rows(jnp.asarray(x, dtype).reshape(K, 1), f)
+    ncol = pad_rows(n.astype(jnp.int32).reshape(K, 1), 0)
+    hcol = pad_rows(jnp.zeros((K, 1), jnp.int32) if head is None
+                    else head.astype(jnp.int32).reshape(K, 1), 0)
+    feas, load = pl.pallas_call(
+        functools.partial(_fleet_feasibility_kernel, eps=eps),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_nodes, N), lambda i: (i, 0)),
+            pl.BlockSpec((block_nodes, N), lambda i: (i, 0)),
+            pl.BlockSpec((block_nodes, N), lambda i: (i, 0)),
+            pl.BlockSpec((block_nodes, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_nodes, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_nodes, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_nodes, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_nodes, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_nodes, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid * block_nodes, 1), jnp.int32),
+            jax.ShapeDtypeStruct((grid * block_nodes, 1), dtype),
+        ],
+        interpret=interpret,
+    )(d2, pad_rows(starts, BIG), pad_rows(ends, BIG), pad_rows(sizes, 0.0),
+      ncol, hcol, col(ps, 0.0), col(cpu_free, 0.0))
+    return feas[:K, 0] != 0, load[:K, 0]

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fleet_feasibility as _ff
 from repro.kernels import moe_gemm as _mg
 from repro.kernels import rmsnorm as _rn
 
@@ -74,3 +75,17 @@ def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
 def moe_gemm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """(E, C, d) x (E, d, f) -> (E, C, f) grouped GEMM."""
     return _mg.moe_gemm(x, w, interpret=_interpret())
+
+
+@jax.jit
+def fleet_feasibility(starts: jnp.ndarray, ends: jnp.ndarray,
+                      sizes: jnp.ndarray, n: jnp.ndarray, ps: jnp.ndarray,
+                      d: jnp.ndarray, cpu_free: jnp.ndarray, head=None):
+    """Stacked (K, N) fleet ledger -> ((K,) feasible mask, (K,) load).
+
+    The fleet simulator's cross-node admission scan fused with the
+    router's pending-work reduction; see kernels/fleet_feasibility.py.
+    ``head`` marks retired slots (fleetsim head-pointer rows; default 0).
+    """
+    return _ff.fleet_feasibility_fwd(starts, ends, sizes, n, ps, d, cpu_free,
+                                     head, interpret=_interpret())

@@ -42,3 +42,69 @@ def moe_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Grouped per-expert GEMM: (E,C,d) @ (E,d,f) -> (E,C,f)."""
     return jnp.einsum("ecd,edf->ecf", x, w,
                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fleet_feasibility_ref(starts: jnp.ndarray, ends: jnp.ndarray,
+                          sizes: jnp.ndarray, n: jnp.ndarray,
+                          ps: jnp.ndarray, d: jnp.ndarray,
+                          cpu_free: jnp.ndarray, head=None,
+                          eps: float = 1e-6):
+    """Cross-node ledger feasibility scan + load reduction, pure jnp.
+
+    Stacked (K, N) ledgers, (K,) ``n``/``ps``/``cpu_free``, scalar absolute
+    deadline ``d`` -> ((K,) feasible bool incl. the capacity check, (K,)
+    pending work).  Same math as ``repro.core.jax_queue._search`` batched
+    over the node axis (searchsorted == masked count on sorted ledgers).
+
+    ``head`` supports the fleet simulator's head-pointer rows: slots
+    ``[0, head)`` are retired (starts/ends overwritten with -BIG, sizes 0 —
+    which keeps the whole row time-sorted and every count/prefix-sum
+    valid), live blocks occupy ``[head, head + n)``.  Default 0 == a plain
+    :class:`repro.core.jax_queue.Ledger`.
+    """
+    feas, _, _, load = fleet_search_ref(starts, ends, sizes, n, ps, d,
+                                        cpu_free, head, eps)
+    return feas, load
+
+
+def fleet_search_ref(starts: jnp.ndarray, ends: jnp.ndarray,
+                     sizes: jnp.ndarray, n: jnp.ndarray, ps: jnp.ndarray,
+                     d: jnp.ndarray, cpu_free: jnp.ndarray, head=None,
+                     eps: float = 1e-6):
+    """Full admission geometry per row: (feasible, j, cap, load).
+
+    ``j`` is the global insertion slot and ``cap`` the window's right edge
+    (the quantities ``jax_queue.push`` computes internally) so a caller can
+    apply the insert without a second search pass.
+    """
+    BIG = 1e30
+    K, N = starts.shape
+    n = n.reshape(K, 1).astype(jnp.int32)
+    head = jnp.zeros((K, 1), jnp.int32) if head is None \
+        else head.reshape(K, 1).astype(jnp.int32)
+    tail = head + n
+    free = jnp.asarray(cpu_free, starts.dtype).reshape(K, 1)
+    p = jnp.asarray(ps, starts.dtype).reshape(K, 1)
+    idx = jnp.arange(N)[None, :]
+    # retired slots hold -BIG and count into both sums identically, so the
+    # straddle comparison and the live-relative positions stay consistent
+    cap_idx = jnp.sum((starts < d).astype(jnp.int32), axis=1, keepdims=True)
+    e_hi = jnp.sum((ends < d).astype(jnp.int32), axis=1, keepdims=True)
+    prev_ends = jnp.concatenate(
+        [jnp.full((K, 1), -BIG, ends.dtype), ends[:, :-1]], axis=1)
+    has_gap = (starts > prev_ends) & (idx >= head + 1) & (idx < tail)
+    gap_ok = has_gap & (idx <= e_hi)
+    prev_gap = jnp.max(jnp.where(gap_ok, idx, head), axis=1, keepdims=True)
+    no_straddle = e_hi >= cap_idx
+    j = jnp.where(no_straddle, e_hi, prev_gap)
+    start_j = jnp.take_along_axis(starts, jnp.minimum(j, N - 1), axis=1)
+    start_j = jnp.where(j < tail, start_j, BIG)
+    cap = jnp.where(no_straddle, d, jnp.minimum(start_j, d))
+    start_h = jnp.take_along_axis(starts, jnp.minimum(head, N - 1), axis=1)
+    start_h = jnp.where(n > 0, start_h, BIG)
+    front = ~no_straddle & (prev_gap == head)
+    cap = jnp.where(front, jnp.minimum(start_h, d), cap)
+    j = jnp.where(front, head, j)
+    pw_j = jnp.sum(jnp.where(idx < j, sizes, 0.0), axis=1, keepdims=True)
+    feasible = (cap - (free + pw_j) >= p - eps) & (cap > free) & (tail < N)
+    return (feasible[:, 0], j[:, 0], cap[:, 0], jnp.sum(sizes, axis=1))

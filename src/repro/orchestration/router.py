@@ -108,10 +108,11 @@ class Router:
             return self._least_loaded(nodes, src, cand_ids, request, now)
         # per-candidate processing time: fast nodes need less of the window
         ps = [request.proc_time / self.topology.speed(i) for i in cand_ids]
-        feasible = _score_feasible(nodes, cand_ids, ps, request.deadline, now)
+        feasible = dict(zip(cand_ids, _score_feasible(
+            nodes, cand_ids, ps, request.deadline, now)))
         ranked = sorted(cand_ids, key=lambda i: (self._load(nodes[i]), i))
         for i in ranked:
-            if feasible[cand_ids.index(i)]:
+            if feasible[i]:
                 return i
         return ranked[0]                      # nobody feasible: least loaded
 
