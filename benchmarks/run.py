@@ -25,8 +25,8 @@ def main() -> None:
 
     sections = []
 
-    from benchmarks import fleetsim_bench, orchestrator_bench, paper_tables, \
-        queue_bench, roofline_report, serving_bench
+    from benchmarks import fleetsim_bench, netsim_bench, orchestrator_bench, \
+        paper_tables, queue_bench, roofline_report, serving_bench
     sections.append(("fig5_fig6", lambda: paper_tables.fig5_fig6(seeds)))
     sections.append(("ablations",
                      lambda: paper_tables.ablations(max(3, seeds // 2))))
@@ -38,6 +38,10 @@ def main() -> None:
     sections.append(("fleetsim_throughput", lambda: fleetsim_bench.run(
         smoke=args.quick,
         json_path=None if args.quick else fleetsim_bench.JSON_DEFAULT)))
+    # full runs refresh the committed BENCH_netsim.json baseline
+    sections.append(("netsim_sweep", lambda: netsim_bench.run(
+        smoke=args.quick,
+        json_path=None if args.quick else netsim_bench.JSON_DEFAULT)))
     sections.append(("serving_engine", lambda: serving_bench.run(
         n_requests=30 if args.quick else 60)))
     sections.append(("roofline", lambda: roofline_report.table(

@@ -1,14 +1,18 @@
 """Beyond the paper: the unified orchestration API on configurations the
 legacy ``SimConfig`` could not express.
 
-Three end-to-end demos (DESIGN.md §4 documents the API):
+Four end-to-end demos (DESIGN.md §4 and §6 document the APIs):
 
 1. **ring**      — scenario-2 load on a 6-node ring (forwarding restricted
                    to adjacent nodes) vs the paper's full mesh;
 2. **two-tier**  — heterogeneous speeds: 4 edge sites backed by 2 cloud
                    nodes that process 4x faster;
 3. **poisson**   — the paper's scenario-1 volume as Poisson streams instead
-                   of the uniform arrival window, plus a diurnal variant.
+                   of the uniform arrival window, plus a diurnal variant;
+4. **netsim**    — the same cluster with the campus network priced in
+                   (``repro.netsim.LinkModel``): referrals cost wire time,
+                   deadline slack shrinks, and the free-referral numbers
+                   above stop being reachable.
 
 Run:  PYTHONPATH=src python examples/custom_topologies.py [--seeds 3]
 """
@@ -16,24 +20,31 @@ import argparse
 
 from repro.core.block_queue import FastPreferentialQueue
 from repro.core.scenarios import DEFAULT_ARRIVAL_WINDOW, SCENARIOS
+from repro.netsim import LinkModel
 from repro.orchestration import (DiurnalWorkload, Orchestrator,
                                  PoissonWorkload, Router, Topology,
                                  UniformWorkload, get_workload)
 
 
-def run_config(name, topology, workload, seeds, policy="random"):
+def run_config(name, topology, workload, seeds, policy="random",
+               network=None):
     met, fwd, disc = 0, 0, 0
     total = 0
+    xfer = 0.0
     for seed in range(seeds):
         router = Router(topology, policy, seed=seed)
-        orch = Orchestrator(topology, FastPreferentialQueue, router)
+        orch = Orchestrator(topology, FastPreferentialQueue, router,
+                            network=network)
         res = orch.run(workload.generate(seed))
         met += res.met_deadline
         fwd += res.forwards
         disc += res.discarded
         total += res.total_requests
+        xfer += res.transfer_time
+    wire = f"   wire {xfer / total:7.1f} UT/req" if network is not None \
+        else ""
     print(f"{name:34s} met {100 * met / total:6.2f}%   "
-          f"forwards/req {fwd / total:5.2f}   discarded {disc}")
+          f"forwards/req {fwd / total:5.2f}   discarded {disc}{wire}")
     return met / total
 
 
@@ -73,9 +84,20 @@ def main():
                DiurnalWorkload(SCENARIOS[1], window=DEFAULT_ARRIVAL_WINDOW,
                                peaks=2, amplitude=0.8), seeds)
 
+    print("\n== 4. the campus network priced in (scenario-2 load, 6-node "
+          "mesh) ==")
+    topo6 = Topology.full_mesh(6)
+    run_config("free referrals (the paper)", topo6, wl, seeds, args.policy)
+    run_config("campus links (5 UT + MB/1.25)", topo6, wl, seeds,
+               args.policy, network=LinkModel.campus(topo6))
+    run_config("wan links (80 UT + MB/0.125)", topo6, wl, seeds,
+               args.policy, network=LinkModel.preset(topo6, "wan"))
+
     print("\nevery configuration above also runs device-resident: "
           "examples/fleet_sweep.py vmaps whole (seeds x SLA) grids via "
-          "repro.fleetsim (cross-validated against this event heap)")
+          "repro.fleetsim (cross-validated against this event heap), and "
+          "examples/mobility_sweep.py adds the netsim axes — UE mobility "
+          "plus a vmapped latency x bandwidth grid in one device call")
 
 
 if __name__ == "__main__":

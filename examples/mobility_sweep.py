@@ -1,0 +1,107 @@
+"""netsim end-to-end: mobile UEs on a priced campus network, and the
+network itself as a vmapped sweep axis.
+
+Two parts:
+
+1. **mobility** (event heap) — the paper's scenario-1 cameras become
+   mobile UEs: cell sites front the MEC nodes, uplinks are priced, and a
+   seeded handover trace re-homes traffic mid-run
+   (:class:`repro.netsim.RadioWorkload`).  Handover churn + uplink tax
+   vs the wired baseline, through the same ``Orchestrator``.
+2. **grid** (fleetsim) — a latency × bandwidth grid of
+   :class:`repro.netsim.NetParams` stacked into ONE vmapped device call
+   (the sweep BENCH_netsim.json benchmarks), printed as a met-rate
+   matrix: watch the referral economics flip as the wire gets slower.
+
+Run:  PYTHONPATH=src python examples/mobility_sweep.py [--seeds 2]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.block_queue import FastPreferentialQueue
+from repro.fleetsim import (NetParams, RequestArrays, SimParams, simulate_fn,
+                            topology_arrays)
+from repro.netsim import LinkModel, RadioModel, RadioWorkload
+from repro.orchestration import (Orchestrator, Router, Topology,
+                                 UniformWorkload, get_workload)
+
+WL = get_workload("paper/scenario1")
+
+
+def part1_mobility(seeds: int) -> None:
+    print("== 1. mobile UEs on the campus radio (scenario-1 volume) ==")
+    topo = Topology.full_mesh(3)
+    link = LinkModel.campus(topo)
+
+    def run(name, workload, network):
+        met = fwd = total = 0
+        for seed in range(seeds):
+            orch = Orchestrator(topo, FastPreferentialQueue,
+                                Router(topo, seed=seed), network=network)
+            res = orch.run(workload.generate(seed))
+            met += res.met_deadline
+            fwd += res.forwards
+            total += res.total_requests
+        print(f"  {name:38s} met {100 * met / total:6.2f}%   "
+              f"forwards/req {fwd / total:5.2f}")
+
+    run("wired cameras, free network (paper)", WL, None)
+    run("wired cameras, campus links", WL, link)
+    static_radio = RadioModel.from_link(link)
+    run("static UEs, campus uplink + links",
+        RadioWorkload(WL, static_radio, link=link), link)
+    mobile = static_radio.with_random_mobility(
+        WL.n_nodes, horizon=110_000.0, handovers_per_ue=3.0, seed=0)
+    run("mobile UEs (3 handovers avg)",
+        RadioWorkload(WL, mobile, link=link), link)
+
+
+def part2_grid() -> None:
+    print("\n== 2. the network as a vmap axis: latency x bandwidth grid, "
+          "one device call ==")
+    K = 3
+    # a hotter, smaller mix so the grid runs in seconds on CPU
+    wl = UniformWorkload([{"S1": 30, "S4": 30, "S5": 25, "S6": 25}] * K,
+                         window=1200.0, name="hot")
+    topo = Topology.full_mesh(K)
+    reqs, _ = wl.to_arrays(0)
+    reqs = RequestArrays(*(jnp.asarray(a) for a in reqs))
+    ta = topology_arrays(topo)
+    ta = type(ta)(*(jnp.asarray(a) for a in ta))
+    R = int(reqs.arrival.shape[0])
+    tgt = jnp.full((R, 2), -1, jnp.int32)
+
+    lams = (0.0, 5.0, 30.0, 120.0)
+    bws = (float("inf"), 1.25, 0.3125)          # MB/UT; inf = free wire
+
+    nets = [NetParams.uniform(K, lam, 0.0 if np.isinf(bw) else 1.0 / bw)
+            for lam in lams for bw in bws]
+    stacked = NetParams(latency=jnp.stack([n.latency for n in nets]),
+                        inv_bw=jnp.stack([n.inv_bw for n in nets]))
+    run = simulate_fn(policy="least_loaded", capacity=256, depth=128,
+                      network=True)
+    sweep = jax.vmap(run, in_axes=(None, None, None, None, 0))
+    m = sweep(reqs, ta, SimParams.make(0), tgt, stacked)
+    met = 100.0 * np.asarray(m.met_deadline).reshape(len(lams), len(bws)) / R
+
+    hdr = "".join(f"  bw={'inf' if np.isinf(b) else b:>6}" for b in bws)
+    print(f"  met-rate %, {R} requests/cell, {len(nets)} cells resident:")
+    print(f"  {'latency':>8s}{hdr}")
+    for i, lam in enumerate(lams):
+        cells = "".join(f"  {met[i, j]:8.1f}" for j in range(len(bws)))
+        print(f"  {lam:8.0f}{cells}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=2)
+    args = ap.parse_args()
+    part1_mobility(args.seeds)
+    part2_grid()
+
+
+if __name__ == "__main__":
+    main()

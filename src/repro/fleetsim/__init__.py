@@ -26,10 +26,11 @@ from repro.fleetsim.arrays import (RequestArrays, TopologyArrays,
 from repro.fleetsim.core import (DISCARDED, LATE, MET, OVERFLOW, PENDING,
                                  POLICIES, FleetMetrics, SimParams, simulate,
                                  simulate_fn)
+from repro.netsim.link import NetParams          # the vmappable network axis
 
 __all__ = [
     "RequestArrays", "TopologyArrays", "pack_requests", "scenario_arrays",
     "topology_arrays",
-    "FleetMetrics", "SimParams", "simulate", "simulate_fn", "POLICIES",
-    "PENDING", "MET", "LATE", "DISCARDED", "OVERFLOW",
+    "FleetMetrics", "NetParams", "SimParams", "simulate", "simulate_fn",
+    "POLICIES", "PENDING", "MET", "LATE", "DISCARDED", "OVERFLOW",
 ]

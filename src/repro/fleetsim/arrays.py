@@ -34,6 +34,10 @@ class RequestArrays(NamedTuple):
     rel_deadline: np.ndarray   # (R,) f32 relative SLA deadline
     origin: np.ndarray         # (R,) i32 origin node id
     service: np.ndarray        # (R,) i32 index into the service name table
+    payload: np.ndarray = None  # (R,) f32 frame size in MB (netsim wire
+    #                             cost: delay = latency + payload * inv_bw;
+    #                             ignored — and may be None — without a
+    #                             NetParams)
 
 
 class TopologyArrays(NamedTuple):
@@ -44,14 +48,20 @@ class TopologyArrays(NamedTuple):
     speeds: np.ndarray         # (K,) f32
 
 
-def pack_requests(requests: Sequence[Request], dtype=np.float32
+def pack_requests(requests: Sequence[Request], dtype=np.float32,
+                  payload_fn=None
                   ) -> Tuple[RequestArrays, Tuple[str, ...], List[int]]:
     """Request objects -> (arrays, service name table, host rid per row).
 
     Rows keep the caller's order, which every Workload already emits sorted
     by ``(arrival_time, rid)`` — the same total order the orchestrator's
-    event heap uses for simultaneous arrivals.
+    event heap uses for simultaneous arrivals.  ``payload_fn(service)``
+    sets the per-request wire payload in MB (default: the netsim frame
+    model, ``pixels × bytes_per_pixel``); it only matters when a
+    :class:`repro.netsim.NetParams` is passed to ``simulate``.
     """
+    if payload_fn is None:
+        from repro.netsim.link import default_payload as payload_fn
     names = sorted({r.service.name for r in requests})
     name_id = {s: i for i, s in enumerate(names)}
     arrays = RequestArrays(
@@ -61,6 +71,7 @@ def pack_requests(requests: Sequence[Request], dtype=np.float32
         origin=np.array([r.origin_node for r in requests], np.int32),
         service=np.array([name_id[r.service.name] for r in requests],
                          np.int32),
+        payload=np.array([payload_fn(r.service) for r in requests], dtype),
     )
     return arrays, tuple(names), [r.rid for r in requests]
 

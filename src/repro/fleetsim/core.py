@@ -38,6 +38,14 @@ with the event heap is exact for deterministic policies and exact under
 forwarding-trace replay for the stochastic ones (tie-break contract in
 DESIGN.md §5; cross-validated in fleetsim/validate.py and
 tests/test_fleetsim.py).
+
+The network is a further sweep axis (``net``: :class:`repro.netsim.
+NetParams` — (K, K) latency / inverse-bandwidth tensors): the
+speculative forward chain carries wire-delayed arrival times, so a
+referral consumes admission slack exactly as in the event heap's
+netsim integration (DESIGN.md §6).  ``net=None`` compiles the exact
+pre-netsim step; ``NetParams.zero`` reproduces its outcomes bit-for-bit
+(equivalence-guarded in tests/test_netsim.py).
 """
 from __future__ import annotations
 
@@ -50,6 +58,7 @@ import jax.numpy as jnp
 from repro.core import jax_queue as jq
 from repro.fleetsim.arrays import RequestArrays, TopologyArrays
 from repro.kernels import ref as kref
+from repro.netsim.link import NetParams
 
 POLICIES = ("random", "power_of_two", "least_loaded", "round_robin",
             "batched_feasible", "trace")
@@ -214,22 +223,26 @@ def _route_next(policy: str, topo: TopologyArrays, load, cur, key, hop: int,
 # ---------------------------------------------------------------------------
 def _step(state: FleetState, x, *, topo: TopologyArrays, key, policy: str,
           max_forwards: int, discard_on_exhaust: bool, capacity: int,
-          depth: int, use_pallas: bool, R: int) -> FleetState:
-    i, t, p, drel, origin, tgt_row = x
+          depth: int, use_pallas: bool, R: int, use_network: bool,
+          net: Optional[NetParams]) -> FleetState:
+    i, t, p, drel, origin, tgt_row, payload = x
     d = t + drel
     W = depth
     state = _retire(state, t, R)
     ps = p / topo.speeds                                    # (K,) scaled
     cpu_free = jnp.maximum(t, state.busy)
 
-    feas_all = None
+    feas_all = win_all = hrel_all = None
     if policy == "batched_feasible":
-        # whole-fleet mask over each node's live window (one gather): this
-        # is the Pallas fleet-feasibility kernel's slot in the step
+        # whole-fleet window gather (one take): with zero network this
+        # feeds the single fused mask below; with a network each hop
+        # re-scores it at the referral's delayed arrival (link_cost)
         w0_all = jnp.clip(state.head, 0, capacity - W)
         cols = w0_all[:, None] + jnp.arange(W)[None, :]
         win_all = lambda a: jnp.take_along_axis(a, cols, axis=1)
         hrel_all = state.head - w0_all
+    if policy == "batched_feasible" and not use_network:
+        # this is the Pallas fleet-feasibility kernel's slot in the step
         if use_pallas:
             from repro.kernels import ops as kops
             feas_all, _ = kops.fleet_feasibility(
@@ -241,13 +254,40 @@ def _step(state: FleetState, x, *, topo: TopologyArrays, key, policy: str,
                 win_all(state.sizes), state.nq, ps, d, cpu_free, hrel_all)
 
     # speculative candidate chain: v[h] is where the request would sit
-    # after h forwards; the rr pointer is resolved by the realized count
+    # after h forwards (arriving at t_chain[h] once wire costs are paid);
+    # the rr pointer is resolved by the realized count
     kreq = jax.random.fold_in(key, i)
     vs, rrs = [origin], [state.rr]
     cur, rr = origin, state.rr
+    t_cur = t
+    ts = [t_cur]
     for hop in range(max_forwards):
-        cur, rr = _route_next(policy, topo, state.load, cur, kreq, hop,
-                              tgt_row, feas_all, rr)
+        feas_h = feas_all
+        if policy == "batched_feasible" and use_network:
+            # per-hop mask: each candidate scored at its delayed arrival
+            # t_cur + delay(cur, cand) — the fused link_cost kernel's slot
+            if use_pallas:
+                from repro.kernels import ops as kops
+                feas_h, _, _ = kops.link_cost(
+                    win_all(state.starts), win_all(state.ends),
+                    win_all(state.sizes), state.nq, ps, d, state.busy,
+                    hrel_all, t_cur, net.latency[cur], net.inv_bw[cur],
+                    payload)
+            else:
+                feas_h, _, _ = kref.link_cost_ref(
+                    win_all(state.starts), win_all(state.ends),
+                    win_all(state.sizes), state.nq, ps, d, state.busy,
+                    hrel_all, t_cur, net.latency[cur], net.inv_bw[cur],
+                    payload)
+        nxt, rr = _route_next(policy, topo, state.load, cur, kreq, hop,
+                              tgt_row, feas_h, rr)
+        if use_network:
+            # the hop's wire cost — latency plus frame serialization
+            # (DESIGN.md §6) — as two scalar gathers, not a (K, K)
+            # elementwise product per scan step
+            t_cur = t_cur + net.latency[cur, nxt] + payload * net.inv_bw[cur, nxt]
+        ts.append(t_cur)
+        cur = nxt
         vs.append(cur)
         rrs.append(rr)
     v = jnp.stack(vs)                                       # (H,)
@@ -267,11 +307,20 @@ def _step(state: FleetState, x, *, topo: TopologyArrays, key, policy: str,
     ends_w = jnp.stack([win(state.ends, h) for h in range(H)])
     sizes_w = jnp.stack([win(state.sizes, h) for h in range(H)])
 
+    # the chain's per-candidate CPU-free floor: with a network the request
+    # only reaches candidate h at t_chain[h], so the wire time comes
+    # straight out of the admission slack — a referral can cause a miss
+    if use_network:
+        t_chain = jnp.stack(ts)                             # (H,)
+        cpu_free_v = jnp.maximum(t_chain, state.busy[v])
+    else:
+        cpu_free_v = cpu_free[v]
+
     # one fused feasibility + geometry pass over the candidates' windows
     # (the window-full check doubles as the buffer-room check: w0 clamps to
     # capacity - W, so tail_rel == W <=> head + nq == capacity)
     ok, j, cap, _ = kref.fleet_search_ref(
-        starts_w, ends_w, sizes_w, state.nq[v], ps[v], d, cpu_free[v],
+        starts_w, ends_w, sizes_w, state.nq[v], ps[v], d, cpu_free_v,
         head_rel)
 
     # stop position: first candidate that admits or exhausts the chain
@@ -296,19 +345,21 @@ def _step(state: FleetState, x, *, topo: TopologyArrays, key, policy: str,
     # test reports "no room" where the host might admit) — surface it
     sat = jnp.any((head_rel + state.nq[v] >= W)
                   & (jnp.arange(max_forwards + 1) <= h_star))
-    idle = state.busy[dst] < t
+    t_dst = t_chain[h_star] if use_network else t
+    idle = state.busy[dst] < t_dst
     sr_w = jax.lax.dynamic_slice(state.slot_rid[dst], (w0_d,), (W,))
     n_starts, n_ends, n_sizes, admitted, (n_sr,) = jq.insert_at(
         starts_w[h_star], ends_w[h_star], sizes_w[h_star],
         head_rel[h_star], state.nq[dst], feas_at, forced_ok,
-        j[h_star], cap[h_star], ps[dst], cpu_free[dst],
+        j[h_star], cap[h_star], ps[dst], cpu_free_v[h_star],
         meta=(sr_w,), meta_vals=(i,))
 
     # idle CPU: the host engine pushes then immediately pops — net effect is
-    # the request starts at t and never enters the ledger
+    # the request starts at its (wire-delayed) arrival and never enters
+    # the ledger
     start_now = admitted & idle
     queue_it = admitted & ~idle
-    c_now = t + ps[dst]
+    c_now = t_dst + ps[dst]
 
     def put(buf, new, old):
         return jax.lax.dynamic_update_slice(
@@ -336,11 +387,13 @@ def _step(state: FleetState, x, *, topo: TopologyArrays, key, policy: str,
 # ---------------------------------------------------------------------------
 @functools.partial(
     jax.jit, static_argnames=("policy", "max_forwards", "discard_on_exhaust",
-                              "capacity", "depth", "use_pallas"))
+                              "capacity", "depth", "use_pallas",
+                              "use_network"))
 def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
-              targets: jnp.ndarray, *, policy: str, max_forwards: int,
-              discard_on_exhaust: bool, capacity: int, depth: int,
-              use_pallas: bool) -> FleetMetrics:
+              targets: jnp.ndarray, net: Optional[NetParams] = None, *,
+              policy: str, max_forwards: int, discard_on_exhaust: bool,
+              capacity: int, depth: int, use_pallas: bool,
+              use_network: bool = False) -> FleetMetrics:
     R = reqs.arrival.shape[0]
     K = topo.speeds.shape[0]
     N = capacity
@@ -361,10 +414,14 @@ def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
     step = functools.partial(
         _step, topo=topo, key=key, policy=policy, max_forwards=max_forwards,
         discard_on_exhaust=discard_on_exhaust, capacity=capacity,
-        depth=depth, use_pallas=use_pallas, R=R)
+        depth=depth, use_pallas=use_pallas, R=R, use_network=use_network,
+        net=net)
     d_abs = reqs.arrival + reqs.rel_deadline * params.sla_scale
+    payload = (reqs.payload if reqs.payload is not None
+               else jnp.zeros_like(reqs.arrival))
     xs = (jnp.arange(R, dtype=jnp.int32), reqs.arrival, reqs.proc,
-          reqs.rel_deadline * params.sla_scale, reqs.origin, targets)
+          reqs.rel_deadline * params.sla_scale, reqs.origin, targets,
+          payload)
     state, ys = jax.lax.scan(step, state, xs)
     state = _retire(state, jnp.asarray(jnp.inf, dt), R)     # drain
 
@@ -402,7 +459,8 @@ def simulate(reqs: RequestArrays, topo: TopologyArrays,
              max_forwards: int = 2, discard_on_exhaust: bool = False,
              capacity: int = 256, depth: Optional[int] = None,
              targets: Optional[jnp.ndarray] = None,
-             use_pallas: bool = False) -> FleetMetrics:
+             use_pallas: bool = False,
+             net: Optional[NetParams] = None) -> FleetMetrics:
     """Run the full fleet simulation as one device call.
 
     ``reqs``/``topo`` come from :mod:`repro.fleetsim.arrays` (or
@@ -421,26 +479,46 @@ def simulate(reqs: RequestArrays, topo: TopologyArrays,
     into ``metrics.window_saturation`` — size capacity/depth so both stay
     0.  ``targets`` replays recorded forwarding choices (policy="trace",
     shape (R, max_forwards)).
+
+    ``net`` (a :class:`repro.netsim.NetParams`) prices every referral
+    hop: the wire time ``latency[u, v] + payload · inv_bw[u, v]`` delays
+    the request's arrival along the speculative forward chain, consuming
+    admission slack (DESIGN.md §6).  ``net=None`` compiles the exact
+    pre-netsim step — and ``NetParams.zero`` reproduces its outcomes
+    bit-for-bit (equivalence-guarded).
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown fleetsim policy {policy!r}; "
                          f"options: {sorted(POLICIES)}")
     params = params if params is not None else SimParams.make()
-    reqs = RequestArrays(*(jnp.asarray(a) for a in reqs))
+    reqs = RequestArrays(
+        *(jnp.asarray(a) for a in reqs[:5]),
+        payload=None if reqs.payload is None else jnp.asarray(reqs.payload))
     topo = TopologyArrays(*(jnp.asarray(a) for a in topo))
     if targets is None:
         targets = jnp.full((reqs.arrival.shape[0], max(max_forwards, 1)),
                            -1, jnp.int32)
     depth = capacity if depth is None else min(depth, capacity)
+    use_network = net is not None
+    if use_network:
+        if reqs.payload is None:
+            # never silently drop the serialization half of the wire cost
+            raise ValueError(
+                "net= requires RequestArrays.payload (use pack_requests / "
+                "Workload.to_arrays, or pass payload=zeros explicitly for "
+                "a latency-only network)")
+        net = NetParams(*(jnp.asarray(a, jnp.float32) for a in net))
     return _simulate(reqs, topo, params, jnp.asarray(targets, jnp.int32),
-                     policy=policy, max_forwards=max_forwards,
+                     net, policy=policy, max_forwards=max_forwards,
                      discard_on_exhaust=discard_on_exhaust,
-                     capacity=capacity, depth=depth, use_pallas=use_pallas)
+                     capacity=capacity, depth=depth, use_pallas=use_pallas,
+                     use_network=use_network)
 
 
 def simulate_fn(*, policy: str = "random", max_forwards: int = 2,
                 discard_on_exhaust: bool = False, capacity: int = 256,
-                depth: Optional[int] = None, use_pallas: bool = False):
+                depth: Optional[int] = None, use_pallas: bool = False,
+                network: bool = False):
     """The jitted simulator with statics bound — the thing to ``jax.vmap``.
 
     Signature of the returned function:
@@ -451,9 +529,17 @@ def simulate_fn(*, policy: str = "random", max_forwards: int = 2,
         run = fleetsim.simulate_fn(policy="least_loaded")
         sweep = jax.vmap(run, in_axes=(None, None, SimParams(0, None), None))
         metrics = sweep(reqs, topo, SimParams.make(jnp.arange(32), 1.0), tgt)
+
+    With ``network=True`` the returned function takes a fifth argument —
+    a :class:`repro.netsim.NetParams` — making the network itself a sweep
+    axis::
+
+        run = fleetsim.simulate_fn(policy="least_loaded", network=True)
+        grid = jax.vmap(run, in_axes=(None, None, None, None, 0))
+        metrics = grid(reqs, topo, params, tgt, stacked_net_params)
     """
     return functools.partial(
         _simulate, policy=policy, max_forwards=max_forwards,
         discard_on_exhaust=discard_on_exhaust, capacity=capacity,
         depth=capacity if depth is None else min(depth, capacity),
-        use_pallas=use_pallas)
+        use_pallas=use_pallas, use_network=network)

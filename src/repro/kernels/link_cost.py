@@ -1,0 +1,154 @@
+"""Pallas kernel: fused transfer-cost + queue-feasibility candidate scoring.
+
+The network-aware forward chain asks, for ONE request at a source node,
+"which of the K candidate nodes can still admit it *after* paying the
+wire cost of the referral?"  Unfused that is two passes — a (K,) delay
+computation (latency row + payload serialization) and the cross-node
+ledger feasibility scan of :mod:`repro.kernels.fleet_feasibility` — over
+the same stacked ``(num_nodes, capacity)`` ledger tile.  Both are
+bandwidth-bound on the ledger block, so this kernel fuses them: each
+grid program loads a ``(block_nodes, capacity)`` tile once and emits the
+feasibility bit (evaluated at the *delayed* arrival ``max(t_src +
+latency + payload·inv_bw, busy)``), the arrival time itself, and the
+node's pending work in a single VMEM pass.  A referral that would eat
+the deadline slack scores infeasible before it is made — the admission
+geometry (searchsorted-as-masked-count, gap scan, prefix slack) is
+identical to the fleet-feasibility kernel.
+
+Pure-jnp oracle: :func:`repro.kernels.ref.link_cost_ref` (bit-for-bit on
+the feasibility bits).  Off-TPU the :mod:`repro.kernels.ops` wrapper
+runs this body in interpret mode, lowering to ordinary XLA.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+
+def _link_cost_kernel(t_ref, payload_ref, d_ref, starts_ref, ends_ref,
+                      sizes_ref, n_ref, head_ref, ps_ref, busy_ref, lat_ref,
+                      invbw_ref, feas_ref, arr_ref, load_ref, *, eps: float):
+    t = t_ref[0, 0]
+    payload = payload_ref[0, 0]
+    d = d_ref[0, 0]
+    starts = starts_ref[...]                     # (bk, N)
+    ends = ends_ref[...]
+    sizes = sizes_ref[...]
+    n = n_ref[...]                               # (bk, 1) int32
+    head = head_ref[...]                         # (bk, 1) int32
+    ps = ps_ref[...]                             # (bk, 1)
+    busy = busy_ref[...]                         # (bk, 1)
+    lat = lat_ref[...]                           # (bk, 1)
+    invbw = invbw_ref[...]                       # (bk, 1)
+    bk, N = starts.shape
+    tail = head + n
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bk, N), 1)
+
+    # the fused part: referral wire cost delays the arrival, and the
+    # admission window opens at the later of (arrival, CPU-free) — same
+    # association order as the oracle so the bits match exactly
+    arrive = t + lat + payload * invbw
+    free = jnp.maximum(arrive, busy)
+
+    # admission geometry — identical to fleet_feasibility: searchsorted on
+    # a sorted ledger == masked count; retired slots hold -BIG/0 and count
+    # into both sums identically
+    cap_idx = jnp.sum((starts < d).astype(jnp.int32), axis=1, keepdims=True)
+    e_hi = jnp.sum((ends < d).astype(jnp.int32), axis=1, keepdims=True)
+
+    prev_ends = jnp.concatenate(
+        [jnp.full((bk, 1), -BIG, ends.dtype), ends[:, :-1]], axis=1)
+    has_gap = (starts > prev_ends) & (idx >= head + 1) & (idx < tail)
+    gap_ok = has_gap & (idx <= e_hi)
+    prev_gap = jnp.max(jnp.where(gap_ok, idx, head), axis=1, keepdims=True)
+
+    no_straddle = e_hi >= cap_idx
+    j = jnp.where(no_straddle, e_hi, prev_gap)
+    j_clip = jnp.minimum(j, N - 1)
+    start_j = jnp.sum(jnp.where(idx == j_clip, starts, 0.0), axis=1,
+                      keepdims=True)
+    start_j = jnp.where(j < tail, start_j, BIG)
+    cap = jnp.where(no_straddle, d, jnp.minimum(start_j, d))
+    start_h = jnp.sum(jnp.where(idx == jnp.minimum(head, N - 1), starts, 0.0),
+                      axis=1, keepdims=True)
+    start_h = jnp.where(n > 0, start_h, BIG)
+    front = (~no_straddle) & (prev_gap == head)
+    cap = jnp.where(front, jnp.minimum(start_h, d), cap)
+    j = jnp.where(front, head, j)
+
+    pw_j = jnp.sum(jnp.where(idx < j, sizes, 0.0), axis=1, keepdims=True)
+    feasible = (cap - (free + pw_j) >= ps - eps) & (cap > free) & (tail < N)
+    feas_ref[...] = feasible.astype(jnp.int32)
+    arr_ref[...] = arrive
+    load_ref[...] = jnp.sum(sizes, axis=1, keepdims=True)
+
+
+def link_cost_fwd(starts: jnp.ndarray, ends: jnp.ndarray, sizes: jnp.ndarray,
+                  n: jnp.ndarray, ps: jnp.ndarray, d: jnp.ndarray,
+                  busy: jnp.ndarray, head, t_src: jnp.ndarray,
+                  lat_row: jnp.ndarray, inv_bw_row: jnp.ndarray,
+                  payload: jnp.ndarray, *, eps: float = 1e-6,
+                  block_nodes: int = 8, interpret: bool = True
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stacked (K, N) ledgers + the source's (K,) latency / inverse-
+    bandwidth rows -> ((K,) feasible bool, (K,) arrival, (K,) load).
+
+    ``t_src`` is the time the request sits at the source, ``payload`` its
+    frame size (both scalars); ``busy`` the per-node CPU-free floor
+    (``max`` with the delayed arrival happens inside).  ``head`` marks
+    retired slots (fleetsim head-pointer rows; default 0 == plain
+    Ledger).  A full node (``head + n == capacity``) is infeasible.
+    """
+    K, N = starts.shape
+    block_nodes = min(block_nodes, K)
+    grid = -(-K // block_nodes)
+    pad = grid * block_nodes - K
+
+    def pad_rows(x, fill):
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                       constant_values=fill) if pad else x
+
+    dtype = starts.dtype
+    scalar = lambda x: jnp.asarray(x, dtype).reshape(1, 1)
+    col = lambda x, f: pad_rows(jnp.asarray(x, dtype).reshape(K, 1), f)
+    ncol = pad_rows(n.astype(jnp.int32).reshape(K, 1), 0)
+    hcol = pad_rows(jnp.zeros((K, 1), jnp.int32) if head is None
+                    else head.astype(jnp.int32).reshape(K, 1), 0)
+    blockspec_rows = pl.BlockSpec((block_nodes, N), lambda i: (i, 0))
+    blockspec_col = pl.BlockSpec((block_nodes, 1), lambda i: (i, 0))
+    blockspec_scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    feas, arr, load = pl.pallas_call(
+        functools.partial(_link_cost_kernel, eps=eps),
+        grid=(grid,),
+        in_specs=[
+            blockspec_scalar,            # t_src
+            blockspec_scalar,            # payload
+            blockspec_scalar,            # d
+            blockspec_rows,              # starts
+            blockspec_rows,              # ends
+            blockspec_rows,              # sizes
+            blockspec_col,               # n
+            blockspec_col,               # head
+            blockspec_col,               # ps
+            blockspec_col,               # busy
+            blockspec_col,               # lat_row
+            blockspec_col,               # inv_bw_row
+        ],
+        out_specs=[blockspec_col, blockspec_col, blockspec_col],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid * block_nodes, 1), jnp.int32),
+            jax.ShapeDtypeStruct((grid * block_nodes, 1), dtype),
+            jax.ShapeDtypeStruct((grid * block_nodes, 1), dtype),
+        ],
+        interpret=interpret,
+    )(scalar(t_src), scalar(payload), scalar(d),
+      pad_rows(starts, BIG), pad_rows(ends, BIG), pad_rows(sizes, 0.0),
+      ncol, hcol, col(ps, 0.0), col(busy, 0.0), col(lat_row, 0.0),
+      col(inv_bw_row, 0.0))
+    return feas[:K, 0] != 0, arr[:K, 0], load[:K, 0]

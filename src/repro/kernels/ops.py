@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fleet_feasibility as _ff
+from repro.kernels import link_cost as _lc
 from repro.kernels import moe_gemm as _mg
 from repro.kernels import rmsnorm as _rn
 
@@ -89,3 +90,22 @@ def fleet_feasibility(starts: jnp.ndarray, ends: jnp.ndarray,
     """
     return _ff.fleet_feasibility_fwd(starts, ends, sizes, n, ps, d, cpu_free,
                                      head, interpret=_interpret())
+
+
+@jax.jit
+def link_cost(starts: jnp.ndarray, ends: jnp.ndarray, sizes: jnp.ndarray,
+              n: jnp.ndarray, ps: jnp.ndarray, d: jnp.ndarray,
+              busy: jnp.ndarray, head, t_src: jnp.ndarray,
+              lat_row: jnp.ndarray, inv_bw_row: jnp.ndarray,
+              payload: jnp.ndarray):
+    """Fused referral scoring: transfer delay + ledger feasibility.
+
+    One request at a source node at ``t_src`` against K candidates'
+    stacked (K, N) ledgers; ``lat_row``/``inv_bw_row`` are the source's
+    rows of the :class:`repro.netsim.NetParams` tensors.  Returns
+    ``((K,) feasible, (K,) arrival, (K,) load)``; oracle:
+    :func:`repro.kernels.ref.link_cost_ref`.
+    """
+    return _lc.link_cost_fwd(starts, ends, sizes, n, ps, d, busy, head,
+                             t_src, lat_row, inv_bw_row, payload,
+                             interpret=_interpret())

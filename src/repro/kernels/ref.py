@@ -67,6 +67,35 @@ def fleet_feasibility_ref(starts: jnp.ndarray, ends: jnp.ndarray,
     return feas, load
 
 
+def link_cost_ref(starts: jnp.ndarray, ends: jnp.ndarray,
+                  sizes: jnp.ndarray, n: jnp.ndarray, ps: jnp.ndarray,
+                  d: jnp.ndarray, busy: jnp.ndarray, head,
+                  t_src: jnp.ndarray, lat_row: jnp.ndarray,
+                  inv_bw_row: jnp.ndarray, payload: jnp.ndarray,
+                  eps: float = 1e-6):
+    """Fused transfer-cost + queue-feasibility candidate scoring.
+
+    One request sitting at a source node at ``t_src`` is scored against
+    K candidate nodes in a single pass: the wire cost of the referral
+    (``lat_row + payload * inv_bw_row``, the source's row of the
+    :class:`repro.netsim.NetParams` tensors) delays its arrival at each
+    candidate, and admission feasibility is evaluated at that delayed
+    arrival — so a referral that would eat the deadline slack scores
+    infeasible *before* it is made.  ``busy`` is each node's CPU-free
+    time; ``head`` supports fleetsim's head-pointer rows like
+    :func:`fleet_feasibility_ref`.
+
+    Returns ``((K,) feasible, (K,) arrival time, (K,) pending work)`` —
+    the oracle for the Pallas ``link_cost`` kernel.
+    """
+    K = starts.shape[0]
+    arrive = t_src + lat_row.reshape(K) + payload * inv_bw_row.reshape(K)
+    free = jnp.maximum(arrive, busy.reshape(K))
+    feas, _, _, load = fleet_search_ref(starts, ends, sizes, n, ps, d,
+                                        free, head, eps)
+    return feas, arrive, load
+
+
 def fleet_search_ref(starts: jnp.ndarray, ends: jnp.ndarray,
                      sizes: jnp.ndarray, n: jnp.ndarray, ps: jnp.ndarray,
                      d: jnp.ndarray, cpu_free: jnp.ndarray, head=None,

@@ -1,0 +1,38 @@
+"""repro.netsim — the 5G-MEC network model that makes referrals cost
+something.
+
+Three pieces, composable with both orchestration cores:
+
+* :class:`LinkModel` — per-edge latency + bandwidth over a
+  :class:`~repro.orchestration.topology.Topology`, per-service payload
+  sizes (Table I resolutions → frame MB), campus/metro/wan presets;
+* :class:`RadioModel` / :class:`RadioWorkload` — cell/UE attachment,
+  uplink pricing and mobility handovers as a workload axis;
+* :class:`NetParams` — the ``(K, K)`` device tensors
+  :func:`repro.fleetsim.simulate` folds into its forward-chain scoring
+  (a vmappable sweep axis next to ``SimParams``).
+
+Quick start::
+
+    from repro.core.block_queue import FastPreferentialQueue
+    from repro.netsim import LinkModel, paper_campus
+    from repro.orchestration import Orchestrator, Router
+
+    topo, link = paper_campus()          # 3 MEC nodes, campus-LAN pricing
+    orch = Orchestrator(topo, FastPreferentialQueue, network=link)
+    result = orch.run(requests)          # referrals now consume slack
+
+The zero model (``LinkModel.zero(topo)``) reproduces the network-free
+outputs of both engines exactly — the equivalence contract in DESIGN.md
+§6, guarded by tests/test_netsim.py and ``repro.fleetsim.validate
+--net zero``.
+"""
+from repro.netsim.link import (BYTES_PER_PIXEL, PROFILES, LinkModel,
+                               NetParams, default_payload, paper_campus)
+from repro.netsim.radio import CellSite, RadioModel, RadioWorkload
+
+__all__ = [
+    "BYTES_PER_PIXEL", "PROFILES", "LinkModel", "NetParams",
+    "default_payload", "paper_campus",
+    "CellSite", "RadioModel", "RadioWorkload",
+]

@@ -30,12 +30,15 @@ import dataclasses
 import heapq
 import itertools
 import statistics
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, TYPE_CHECKING
 
 from repro.core.node import MECNode, NodeMetrics, QueueLike
 from repro.core.request import Request, Service
 from repro.orchestration.router import Router
 from repro.orchestration.topology import Topology
+
+if TYPE_CHECKING:                                  # pragma: no cover
+    from repro.netsim.link import LinkModel
 
 _ARRIVAL, _COMPLETE = 0, 1
 
@@ -88,6 +91,7 @@ class OrchestratorResult:
     per_node: List[NodeMetrics]
     per_service: Dict[str, ServiceStats]
     completed: List[Request]
+    transfer_time: float = 0.0        # total wire time spent on referrals
 
     @property
     def met_rate(self) -> float:
@@ -102,6 +106,14 @@ class Orchestrator:
     semantics exactly — arrival events try admission at the target node;
     rejects forward ``max_forwards`` times through the router; exhausted
     requests are force-pushed (or discarded under the Beraldi variant).
+
+    ``network`` (a :class:`repro.netsim.LinkModel`) prices every referral:
+    the forwarded request re-arrives ``transfer_delay(src, dst, service)``
+    later while its absolute deadline stays put, so the wire time comes
+    straight out of the admission slack — a referral can *cause* a miss.
+    The router inherits the same model for network-aware feasibility
+    scoring.  ``network=None`` (and the zero model) reproduce the
+    network-free event stream exactly (DESIGN.md §6).
     """
 
     def __init__(self, topology: Topology,
@@ -110,11 +122,27 @@ class Orchestrator:
                  max_forwards: int = 2,
                  forward_delay: float = 0.0,
                  discard_on_exhaust: bool = False,
-                 hooks: Optional[Hooks] = None):
+                 hooks: Optional[Hooks] = None,
+                 network: Optional["LinkModel"] = None):
         self.topology = topology
         self.router = router if router is not None else Router(topology)
         if self.router.topology is not topology:
             raise ValueError("router and orchestrator topology must match")
+        self.network = network
+        if network is not None:
+            if network.n_nodes != topology.n_nodes:
+                raise ValueError(f"network prices {network.n_nodes} nodes "
+                                 f"for a {topology.n_nodes}-node topology")
+            # the router's feasibility scoring must see the same wire
+            # costs AND forward delay the heap events pay (no-op unless
+            # batched_feasible)
+            if self.router.network is None:
+                self.router.network = network
+            elif self.router.network is not network:
+                raise ValueError("router and orchestrator price different "
+                                 "networks; pass one LinkModel to both (or "
+                                 "only to the orchestrator)")
+            self.router.forward_delay = forward_delay
         self.max_forwards = max_forwards
         self.forward_delay = forward_delay
         self.discard_on_exhaust = discard_on_exhaust
@@ -169,10 +197,12 @@ class Orchestrator:
                                   nodes[req.origin_node]))
 
         forwards = 0
+        transfer_time = 0.0
         discarded_reqs: List[Request] = []
         completed: List[Request] = []
         events = 0
         end_time = 0.0
+        network = self.network
 
         def dispatch(node: MECNode, now: float) -> None:
             started = node.start_next(now)
@@ -217,7 +247,16 @@ class Orchestrator:
                 node.metrics.forwards_out += 1
                 target = self.router.choose(nodes, node.node_id,
                                             request=req, now=now)
-                heapq.heappush(heap, (now + self.forward_delay, next(seq),
+                # the referral rides the transport network: the request
+                # re-arrives after the wire time, its deadline unmoved —
+                # the transfer consumes exactly that much admission slack
+                delay = self.forward_delay
+                if network is not None:
+                    hop = network.transfer_delay(node.node_id,
+                                                 target.node_id, req.service)
+                    delay += hop
+                    transfer_time += hop
+                heapq.heappush(heap, (now + delay, next(seq),
                                       _ARRIVAL, req, target))
                 if hooks.on_forward:
                     hooks.on_forward(req, node, target, now)
@@ -237,6 +276,7 @@ class Orchestrator:
             per_node=[n.metrics for n in nodes],
             per_service=_per_service(requests, completed, discarded_reqs),
             completed=completed,
+            transfer_time=transfer_time,
         )
 
 

@@ -41,15 +41,29 @@ ROUTER_POLICIES = ("random", "power_of_two", "least_loaded", "round_robin",
 
 
 class Router:
-    """Pick a forwarding target among a node's topology neighbors."""
+    """Pick a forwarding target among a node's topology neighbors.
+
+    ``network`` (a :class:`repro.netsim.LinkModel`) makes the
+    ``batched_feasible`` policy network-aware: each candidate is scored
+    at its *delayed* arrival ``now + transfer_delay(src, cand, service)``,
+    so a neighbor whose wire cost would eat the deadline slack is not
+    chosen even if its queue alone could admit.  The other policies never
+    read ledger state and are unaffected.
+    """
 
     def __init__(self, topology: Topology, policy: str = "random",
-                 rng: Optional[random.Random] = None, seed: int = 0):
+                 rng: Optional[random.Random] = None, seed: int = 0,
+                 network=None, forward_delay: float = 0.0):
         if policy not in ROUTER_POLICIES:
             raise ValueError(f"unknown router policy {policy!r}; "
                              f"options: {sorted(ROUTER_POLICIES)}")
         self.topology = topology
         self.policy = policy
+        self.network = network
+        # the orchestrator's fixed per-forward delay: scored alongside the
+        # wire cost so feasibility sees the true re-arrival time (the
+        # orchestrator syncs it when it injects its network)
+        self.forward_delay = float(forward_delay)
         self.rng = rng if rng is not None else random.Random(seed)
         self._rr = 0                         # stable-id round-robin pointer
 
@@ -108,8 +122,18 @@ class Router:
             return self._least_loaded(nodes, src, cand_ids, request, now)
         # per-candidate processing time: fast nodes need less of the window
         ps = [request.proc_time / self.topology.speed(i) for i in cand_ids]
+        # network-aware: the request reaches each candidate only after the
+        # forward delay plus the referral's wire time, so feasibility is
+        # scored at that arrival (matching the orchestrator's heap event)
+        if self.network is not None:
+            arrivals = [now + self.forward_delay
+                        + self.network.transfer_delay(src, i,
+                                                      request.service)
+                        for i in cand_ids]
+        else:
+            arrivals = [now] * len(cand_ids)
         feasible = dict(zip(cand_ids, _score_feasible(
-            nodes, cand_ids, ps, request.deadline, now)))
+            nodes, cand_ids, ps, request.deadline, arrivals)))
         ranked = sorted(cand_ids, key=lambda i: (self._load(nodes[i]), i))
         for i in ranked:
             if feasible[i]:
@@ -121,16 +145,17 @@ class Router:
 # Device-batched feasibility scoring
 # ---------------------------------------------------------------------------
 def _score_feasible(nodes, cand_ids: Sequence[int], ps: Sequence[float],
-                    deadline: float, now: float) -> List[bool]:
+                    deadline: float, arrivals: Sequence[float]) -> List[bool]:
     """One admission-feasibility bit per candidate (``ps`` holds the
-    request's speed-scaled processing time per candidate), via a single
+    request's speed-scaled processing time, ``arrivals`` its per-candidate
+    arrival time — they differ under a network model), via a single
     stacked device call when JAX is available (host fallback otherwise)."""
     blocks = []
     frees = []
-    for i in cand_ids:
+    for i, arr in zip(cand_ids, arrivals):
         node = nodes[i]
-        free = node.cpu_free_time(now) if hasattr(node, "cpu_free_time") \
-            else now
+        free = node.cpu_free_time(arr) if hasattr(node, "cpu_free_time") \
+            else arr
         frees.append(free)
         blocks.append(node.queue.scheduled_blocks(free)
                       if hasattr(node.queue, "scheduled_blocks") else [])

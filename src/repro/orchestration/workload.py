@@ -43,17 +43,19 @@ class Workload:
     def total_requests(self, seed: int = 0) -> int:
         return len(self.generate(seed))
 
-    def to_arrays(self, seed: int = 0):
+    def to_arrays(self, seed: int = 0, payload_fn=None):
         """Pack ``generate(seed)`` into the fleet simulator's tensor form.
 
         Returns ``(RequestArrays, service name table)`` — the arrival-sorted
         per-request tensors :func:`repro.fleetsim.simulate` scans, with
         ``service`` ids indexing the returned name tuple.  Stack the arrays
         of several seeds (``jax.tree.map`` + ``jnp.stack``) to vmap a whole
-        seed sweep in one device call.
+        seed sweep in one device call.  ``payload_fn`` overrides the wire
+        payload model (netsim; only read when a ``NetParams`` is passed).
         """
         from repro.fleetsim.arrays import pack_requests
-        arrays, names, _ = pack_requests(self.generate(seed))
+        arrays, names, _ = pack_requests(self.generate(seed),
+                                         payload_fn=payload_fn)
         return arrays, names
 
     @staticmethod

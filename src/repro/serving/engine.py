@@ -76,24 +76,55 @@ class ServeRequest:
 
 
 class ServingReplica:
-    """One model replica with a deadline-aware admission queue."""
+    """One model replica with a deadline-aware admission queue.
+
+    ``speed`` is the replica's :class:`~repro.orchestration.topology.
+    Topology` speed factor: a ``speed = s`` replica admits *and executes*
+    every request ``s``-times faster — the same scaling contract as the
+    simulation plane's :class:`~repro.orchestration.orchestrator.
+    Orchestrator`, so the router's speed-scaled feasibility scoring
+    (``Router._batched_feasible``) and the data plane agree.
+    :class:`DeadlineAwareEngine` overwrites it from an explicitly
+    provided topology (then the source of truth for per-node speeds);
+    with the defaulted full mesh the replica's own ``speed`` stands.
+    """
 
     def __init__(self, replica_id: int, run_batch: Callable[[str, List[Any]], Any],
-                 queue: Optional[QueueLike] = None, max_batch: int = 8):
+                 queue: Optional[QueueLike] = None, max_batch: int = 8,
+                 speed: float = 1.0):
+        if speed <= 0:
+            raise ValueError(f"speed must be positive, got {speed}")
         self.replica_id = replica_id
         self.run_batch = run_batch
         self.queue = queue if queue is not None else FastPreferentialQueue()
         self.max_batch = max_batch
+        self.speed = float(speed)
         self.busy_until = 0.0
         self._by_rid: Dict[int, ServeRequest] = {}
+        self._scaled_services: Dict[tuple, Service] = {}
         self.stats = {"admitted": 0, "rejected": 0, "forced": 0,
                       "met": 0, "missed": 0, "batches": 0}
 
     def cpu_free_time(self, now: float) -> float:
         return max(now, self.busy_until)
 
+    def _scaled_service(self, cls: ServiceClass) -> Service:
+        """The request's admission-ledger service, proc scaled by speed
+        (deadline untouched — SLAs don't move with hardware)."""
+        svc = cls.service()
+        if self.speed == 1.0:
+            return svc
+        key = (svc.name, svc.proc_time, svc.deadline, self.speed)
+        scaled = self._scaled_services.get(key)
+        if scaled is None:
+            scaled = dataclasses.replace(svc,
+                                         proc_time=svc.proc_time / self.speed)
+            self._scaled_services[key] = scaled
+        return scaled
+
     def try_admit(self, req: ServeRequest, now: float, forced: bool) -> bool:
-        core_req = Request(service=req.cls.service(), arrival_time=req.arrival,
+        core_req = Request(service=self._scaled_service(req.cls),
+                           arrival_time=req.arrival,
                            origin_node=self.replica_id, rid=req.rid,
                            forwards=req.forwards)
         ok = self.queue.push(core_req, self.cpu_free_time(now), forced=forced)
@@ -147,7 +178,10 @@ class ServingReplica:
             return self.busy_until, []
         cls = run[0].cls
         b = len(run)
-        t_batch = cls.batch_proc_time.get(b, cls.proc_time * b)
+        # the measured step-time model is for a reference (speed-1) replica;
+        # this replica executes speed× faster — matching the scaled ledger
+        # blocks admission committed to, so admission guarantees survive
+        t_batch = cls.batch_proc_time.get(b, cls.proc_time * b) / self.speed
         outs = self.run_batch(cls.name, [r.payload for r in run])
         self.stats["batches"] += 1
         done = now + t_batch
@@ -182,11 +216,20 @@ class DeadlineAwareEngine:
                 raise ValueError("replicas must be indexed by replica_id "
                                  f"(got id {rep.replica_id} at position {idx})")
         self.max_forwards = max_forwards
-        self.topology = topology if topology is not None \
+        explicit_topology = topology is not None
+        self.topology = topology if explicit_topology \
             else Topology.full_mesh(len(self.replicas))
         if self.topology.n_nodes != len(self.replicas):
             raise ValueError(f"topology has {self.topology.n_nodes} nodes "
                              f"for {len(self.replicas)} replicas")
+        # a provided topology is the source of truth for per-node speeds:
+        # the data plane must execute at the same rate the router scores
+        # and the admission ledger commits to (ROADMAP speed-scaling fix).
+        # Without one, the replicas' own speeds stand — the defaulted
+        # full mesh must not clobber an explicit ServingReplica(speed=...)
+        if explicit_topology:
+            for idx, rep in enumerate(self.replicas):
+                rep.speed = self.topology.speed(idx)
         self.router = Router(self.topology, forward_policy,
                              rng=random.Random(f"serving-fwd:{rng_seed}"))
         self._rng = np.random.default_rng(rng_seed)

@@ -8,6 +8,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core.queues import FIFOQueue
 from repro.models import vit
+from repro.orchestration import Topology
 from repro.serving.engine import (DeadlineAwareEngine, ServeRequest,
                                   ServiceClass, ServingReplica)
 from repro.serving.kv_cache import KVCachePool
@@ -128,6 +129,78 @@ class TestEngine:
         stats = eng.stats()
         assert stats["met"] + stats["missed"] == 12
         assert stats["met"] >= 10
+
+
+class TestSpeedScaling:
+    """ROADMAP regression: the serving DATA PLANE must honor
+    Topology.speed the same way Router._batched_feasible scores it — a
+    fast cloud replica is actually faster, in admission and execution."""
+
+    def test_fast_replica_executes_faster(self):
+        rb = const_runner()
+        cls = mkcls(proc=40.0, deadline=200.0)
+        reps = [ServingReplica(i, rb, max_batch=1) for i in range(2)]
+        eng = DeadlineAwareEngine(reps, topology=Topology(2, speeds=[1.0, 4.0]))
+        slow = eng.submit("x", cls, now=0.0, origin=0)
+        fast = eng.submit("x", cls, now=0.0, origin=1)
+        eng.drain(0.0)
+        assert slow.done_at == pytest.approx(40.0)
+        assert fast.done_at == pytest.approx(10.0)      # 40 / 4x
+
+    def test_admission_ledger_uses_scaled_proc(self):
+        # deadline 12 < proc 10/0.5=20 on the slow replica: the ledger
+        # must reject; the 2x replica (proc 5) must admit
+        cls = mkcls(proc=10.0, deadline=12.0)
+        slow = ServingReplica(0, const_runner(), speed=0.5)
+        fast = ServingReplica(1, const_runner(), speed=2.0)
+        assert not slow.try_admit(ServeRequest("x", cls, 0.0, rid=0), 0.0,
+                                  False)
+        assert fast.try_admit(ServeRequest("x", cls, 0.0, rid=1), 0.0, False)
+
+    def test_batched_step_time_scaled(self):
+        rb = const_runner()
+        cls = mkcls(proc=10.0, deadline=500.0)
+        cls.batch_proc_time = {1: 10.0, 2: 12.0}
+        rep = ServingReplica(0, rb, max_batch=2, speed=4.0)
+        for i in range(2):
+            assert rep.try_admit(ServeRequest("x", cls, 0.0, rid=i), 0.0,
+                                 False)
+        done, served = rep.step(0.0)
+        assert len(served) == 2
+        assert done == pytest.approx(12.0 / 4.0)
+
+    def test_engine_applies_topology_speeds(self):
+        """two_tier: the engine overwrites replica speeds from the
+        topology (source of truth), so the cloud tier really is faster
+        and meets deadlines the flat fleet misses."""
+        topo = Topology.two_tier(2, n_cloud=1, cloud_speed=4.0)
+        reps = [ServingReplica(i, const_runner(), max_batch=1)
+                for i in range(3)]
+        eng = DeadlineAwareEngine(reps, topology=topo)
+        assert [r.speed for r in eng.replicas] == [1.0, 1.0, 4.0]
+        cls = mkcls(proc=30.0, deadline=40.0)
+        # edge 0 is busy after one admit; the overflow refers to the cloud
+        for _ in range(3):
+            eng.submit("x", cls, now=0.0, origin=0)
+        eng.drain(0.0)
+        stats = eng.stats()
+        # cloud at 4x serves a 30 UT job in 7.5 UT: everything meets
+        assert stats["met"] == 3, stats
+
+    def test_default_topology_keeps_explicit_replica_speed(self):
+        """Without an explicit topology the defaulted full mesh must NOT
+        clobber a configured ServingReplica(speed=...)."""
+        rep = ServingReplica(0, const_runner(), max_batch=1, speed=4.0)
+        eng = DeadlineAwareEngine([rep])
+        assert rep.speed == 4.0
+        r = eng.submit("x", mkcls(proc=40.0, deadline=200.0), now=0.0,
+                       origin=0)
+        eng.drain(0.0)
+        assert r.done_at == pytest.approx(10.0)
+
+    def test_speed_validation(self):
+        with pytest.raises(ValueError):
+            ServingReplica(0, const_runner(), speed=0.0)
 
 
 class TestKVCachePool:
