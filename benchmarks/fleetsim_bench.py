@@ -64,13 +64,28 @@ def bench_python(wl: UniformWorkload, topology: Topology, policy: str,
 
 
 def bench_fleetsim(wl: UniformWorkload, topology: Topology, policy: str,
-                   capacity: int, depth: int,
-                   use_pallas: bool = False) -> Tuple[float, dict]:
-    """Steady-state requests/sec (second call: same trace cache, new seed)."""
+                   capacity: int, depth: int, use_pallas: bool = False,
+                   forwards_hint: Optional[int] = None) -> Tuple[float, dict]:
+    """Steady-state requests/sec (warm call: same trace cache, new seed).
+
+    The event-time scan's length is a sizing knob like ``capacity``:
+    ``forwards_hint`` (the Python engine's realized forward count, when
+    that cell ran) sizes it with generous slack; without a hint a probe
+    run at the worst-case ``R * (max_forwards + 1)`` bound measures it.
+    Either way ``event_overflow`` is asserted 0, so the sizing cannot
+    silently clip the run.
+    """
     ta = topology_arrays(topology)
     reqs, _ = wl.to_arrays(0)
+    R = reqs.arrival.shape[0]
+    if forwards_hint is None:
+        probe = simulate(reqs, ta, SimParams.make(0), policy=policy,
+                         capacity=capacity, depth=depth,
+                         use_pallas=use_pallas)
+        forwards_hint = int(probe.forwards)
+    max_events = min(3 * R, R + 4 * forwards_hint + 256)
     kw = dict(policy=policy, capacity=capacity, depth=depth,
-              use_pallas=use_pallas)
+              use_pallas=use_pallas, max_events=max_events)
     simulate(reqs, ta, SimParams.make(0), **kw).met_deadline.block_until_ready()
     t0 = time.perf_counter()
     m = simulate(reqs, ta, SimParams.make(1), **kw)
@@ -78,7 +93,8 @@ def bench_fleetsim(wl: UniformWorkload, topology: Topology, policy: str,
     dt = time.perf_counter() - t0
     assert int(m.overflow) == 0 and int(m.window_saturation) == 0, \
         f"capacity {capacity}/depth {depth} saturated"
-    R = reqs.arrival.shape[0]
+    assert int(m.event_overflow) == 0, \
+        f"event plane saturated (max_events {max_events})"
     return R / dt, dict(met_rate=float(m.met_rate), forwards=int(m.forwards))
 
 
@@ -103,8 +119,12 @@ def bench_sweep(wl: UniformWorkload, topology: Topology, n_seeds: int,
 
     sweep(reqs, ta, params(0), tgt).met_deadline.block_until_ready()
     t0 = time.perf_counter()
-    sweep(reqs, ta, params(n_seeds), tgt).met_deadline.block_until_ready()
+    m = sweep(reqs, ta, params(n_seeds), tgt)
+    m.met_deadline.block_until_ready()
     dt = time.perf_counter() - t0
+    # the sweep keeps the exact worst-case event bound (per-seed forward
+    # counts differ; undersizing would surface here, never silently)
+    assert int(jnp.max(m.event_overflow)) == 0
     return n_seeds / dt, n_seeds * R / dt, n_seeds * R
 
 
@@ -129,14 +149,16 @@ def run(smoke: bool = False, full: bool = False,
         for policy in policies[K]:
             skip_py = policy == "batched_feasible" and (
                 smoke or (K >= 256 and not full))
-            py_rps = None
+            py_rps, hint = None, None
             if not skip_py:
                 py_rps, py_info = bench_python(wl, topo, policy)
+                hint = py_info["forwards"]      # sizes the event plane
             # exercise the Pallas kernel (interpret off-TPU) in the smoke
             # cell so CI covers it; the measured cells use the jnp reference
             use_pallas = smoke and policy == "batched_feasible"
             fs_rps, fs_info = bench_fleetsim(wl, topo, policy, cap, dep,
-                                             use_pallas=use_pallas)
+                                             use_pallas=use_pallas,
+                                             forwards_hint=hint)
             ratio = (fs_rps / py_rps) if py_rps else float("nan")
             tag = f"{fs_rps:,.0f} req/s fleetsim"
             if py_rps:

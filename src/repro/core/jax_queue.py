@@ -232,6 +232,64 @@ def push_nodes(leds: Ledger, ps: jnp.ndarray, ds: jnp.ndarray,
     return jax.vmap(one)(leds, ps, ds, cpu_frees, forced)
 
 
+# ---------------------------------------------------------------------------
+# Sorted event queue — the device mirror of the orchestrator's event heap.
+# A compact (B,) buffer of keys (event times) plus parallel value arrays,
+# kept ascending; the head (index 0) is always the earliest pending event.
+# Both ops are O(B) where-selects, so they scan/vmap like everything else.
+# ---------------------------------------------------------------------------
+def event_push(keys: jnp.ndarray, vals: Tuple[jnp.ndarray, ...],
+               n: jnp.ndarray, key, val_new: Tuple, active
+               ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...],
+                          jnp.ndarray, jnp.ndarray]:
+    """Stable sorted insert into a compact event buffer.
+
+    The insertion slot comes from a masked searchsorted with side='right'
+    (``sum(keys <= key)`` over the live prefix), so an event lands *after*
+    every already-buffered event with an equal key — exactly the host
+    heap's ``(time, seq)`` tie-break, where ``seq`` is monotone in push
+    order.  ``vals`` is a tuple of parallel (B,) arrays that ride the same
+    shift; ``active=False`` makes the whole op a no-op (scan steps that do
+    not emit an event).
+
+    Returns ``(keys, vals, n, dropped)`` — ``dropped`` is True when the
+    push was active but the buffer was full (callers surface it as a
+    metric; it must never be silent).
+    """
+    B = keys.shape[0]
+    idx = jnp.arange(B)
+    room = n < B
+    do = jnp.asarray(active) & room
+    pos = jnp.sum(((keys <= key) & (idx < n)).astype(jnp.int32))
+    src = jnp.clip(idx - 1, 0, B - 1)
+
+    def ins(a, v):
+        out = jnp.where(idx < pos, a,
+                        jnp.where(idx == pos, jnp.asarray(v, a.dtype),
+                                  a[src]))
+        return jnp.where(do, out, a)
+
+    return (ins(keys, key), tuple(ins(a, v) for a, v in zip(vals, val_new)),
+            n + do.astype(n.dtype), jnp.asarray(active) & ~room)
+
+
+def event_pop(keys: jnp.ndarray, vals: Tuple[jnp.ndarray, ...],
+              n: jnp.ndarray, active
+              ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...], jnp.ndarray]:
+    """Drop the head (earliest) event; the vacated tail slot refills with
+    ``+BIG`` keys / zero values so the buffer stays sorted and reads past
+    ``n`` stay inert.  ``active=False`` is a no-op.  Callers read the head
+    fields (``keys[0]``, ``vals[i][0]``) *before* popping."""
+    do = jnp.asarray(active)
+
+    def shift(a, fill):
+        out = jnp.concatenate([a[1:], jnp.full((1,), fill, a.dtype)])
+        return jnp.where(do, out, a)
+
+    return (shift(keys, BIG), tuple(shift(a, 0) for a in vals),
+            n - do.astype(n.dtype))
+
+
 @jax.jit
 def pop(led: Ledger) -> Tuple[Ledger, jnp.ndarray]:
     """Remove the head block; returns (ledger, popped size or 0)."""

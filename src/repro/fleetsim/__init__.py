@@ -21,16 +21,16 @@ Equivalence with the event heap is cross-validated in
 under forwarding-trace replay otherwise — DESIGN.md §5).
 """
 from repro.fleetsim.arrays import (RequestArrays, TopologyArrays,
-                                   pack_requests, scenario_arrays,
-                                   topology_arrays)
+                                   event_bound, pack_requests,
+                                   scenario_arrays, topology_arrays)
 from repro.fleetsim.core import (DISCARDED, LATE, MET, OVERFLOW, PENDING,
                                  POLICIES, FleetMetrics, SimParams, simulate,
                                  simulate_fn)
 from repro.netsim.link import NetParams          # the vmappable network axis
 
 __all__ = [
-    "RequestArrays", "TopologyArrays", "pack_requests", "scenario_arrays",
-    "topology_arrays",
+    "RequestArrays", "TopologyArrays", "event_bound", "pack_requests",
+    "scenario_arrays", "topology_arrays",
     "FleetMetrics", "NetParams", "SimParams", "simulate", "simulate_fn",
     "POLICIES", "PENDING", "MET", "LATE", "DISCARDED", "OVERFLOW",
 ]

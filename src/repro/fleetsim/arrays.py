@@ -16,6 +16,15 @@ flat arrays the device can scan:
 
 Both are NamedTuples of plain arrays, so they stack with ``tree_map`` for
 ``vmap`` sweeps (e.g. one leading seed axis over per-seed request tensors).
+
+Event tensors (DESIGN.md §7): the event-time scan advances over *events*
+— fresh arrivals streamed from the sorted :class:`RequestArrays` through
+a cursor, plus deferred re-arrivals in a compact sorted ``(event_buf,)``
+buffer of ``(time, rid, node, hops)`` columns.  Every request arrives at
+most ``max_forwards + 1`` times, so :func:`event_bound` — the static
+``R * (max_forwards + 1)`` worst case — bounds the scan length; callers
+may size ``max_events`` tighter (``R + expected forwards + slack``) and
+the scan surfaces any shortfall in ``metrics.event_overflow``.
 """
 from __future__ import annotations
 
@@ -46,6 +55,14 @@ class TopologyArrays(NamedTuple):
     neighbors: np.ndarray      # (K, maxdeg) i32, row i padded with i
     degree: np.ndarray         # (K,) i32
     speeds: np.ndarray         # (K,) f32
+
+
+def event_bound(n_requests: int, max_forwards: int) -> int:
+    """The static worst-case event count of a fleet run: every request is
+    processed once per arrival, and a request re-arrives at most
+    ``max_forwards`` times — ``R * (max_forwards + 1)`` scan steps cover
+    any forwarding realization (the default ``max_events``)."""
+    return n_requests * (max_forwards + 1)
 
 
 def pack_requests(requests: Sequence[Request], dtype=np.float32,

@@ -3,29 +3,39 @@ sequential-forwarding strategy compiled end-to-end in JAX.
 
 The event-heap :class:`~repro.orchestration.orchestrator.Orchestrator`
 walks a Python heap; this module replays the *same* strategy as one
-``lax.scan`` over the arrival-sorted request tensor, with the entire fleet
-held as stacked ``(num_nodes, capacity)`` ledger arrays (the
+``lax.scan`` over **events**, with the entire fleet held as stacked
+``(num_nodes, capacity)`` ledger arrays (the
 :class:`~repro.core.jax_queue.Ledger` geometry plus per-slot absolute
 deadlines and request ids) next to per-node ``head``/``busy_until``/
-``load`` vectors.  One scan step = one request:
+``load`` vectors.  One scan step = one *event* — the earliest of
 
-1. **fast-forward** — a masked ``while_loop`` retires every completion due
-   strictly before the arrival (the CPU model is work-conserving, so the
-   pop chain between two arrivals is deterministic).  Rows are
-   *head-pointer* ledgers: a pop clears one slot (start/end to -BIG, size
-   to 0 — which keeps the whole row time-sorted and every count /
+* the next **fresh arrival**, streamed straight from the arrival-sorted
+  request tensor through a cursor (fresh arrivals fill the host heap
+  before the run, so they carry the lowest sequence numbers and win
+  every timestamp tie), and
+* the head of the **deferred re-arrival buffer** — a sorted, compact
+  device event queue (:func:`repro.core.jax_queue.event_push` /
+  ``event_pop``) holding every in-flight referral at its true wire-
+  delayed arrival time, stable-inserted so equal timestamps keep push
+  order, exactly the heap's ``(time, seq)`` key
+
+— processed as a **single hop**:
+
+1. **fast-forward** — a masked ``while_loop`` retires every completion
+   due strictly before the event time (the CPU model is work-conserving,
+   so the pop chain between two events is deterministic).  Rows are
+   *head-pointer* ledgers: a pop clears one slot (start/end to -BIG,
+   size to 0 — which keeps the whole row time-sorted and every count /
    prefix-sum valid) and bumps ``head``, so retiring costs O(nodes)
    scatters instead of shifting the (num_nodes, capacity) block;
-2. **forward chain** — ``max_forwards`` is static, so the paper's
-   sequential forwarding unrolls into the `M+1` candidate nodes, computed
-   *speculatively* before any admission test (routing depends only on
-   loads / rng / the trace row — never on mid-chain ledger state, which
-   cannot change until a request is admitted; the round-robin pointer is
-   resolved afterwards from the realized forward count).  The candidates'
-   ledger rows are gathered once and scored by a single vectorized
-   feasibility pass (:func:`repro.kernels.ref.fleet_search_ref`, the same
-   math as the Pallas fleet-feasibility kernel), and the stop position is
-   one ``argmax`` over the feasible/exhausted mask;
+2. **test + route** — the event's node is scored by one feasibility +
+   geometry pass over its live window; an infeasible, non-exhausted
+   request picks its forwarding target *now*, at true event time (loads,
+   rng, the trace row, and — for ``batched_feasible`` — the fused
+   per-hop ``link_cost`` mask of the :func:`repro.kernels.ops.
+   event_select` kernel all reflect every earlier event), and emits a
+   re-arrival event at ``t + transfer_delay`` instead of resolving the
+   chain speculatively at the source step;
 3. **apply** — feasible insert at the pre-computed (slot, window) pair,
    forced tail-append, or discard as ``where``-selects; an idle CPU
    short-circuits the insert (the host engine pushes then immediately
@@ -35,17 +45,19 @@ Because nothing escapes the device, :func:`simulate` jits whole and
 ``vmap``s over seeds and policy parameters (``SimParams``): a full paper
 table — scenarios x policies x seeds — is one device call.  Equivalence
 with the event heap is exact for deterministic policies and exact under
-forwarding-trace replay for the stochastic ones (tie-break contract in
-DESIGN.md §5; cross-validated in fleetsim/validate.py and
-tests/test_fleetsim.py).
+forwarding-trace replay for the stochastic ones — **under any link
+pricing**, not just the zero network: deferred re-arrivals replay the
+heap's interleaving of arrivals, completions and referrals event for
+event (contract in DESIGN.md §7; cross-validated in fleetsim/validate.py
+and tests/test_fleetsim.py / tests/test_netsim.py).
 
 The network is a further sweep axis (``net``: :class:`repro.netsim.
-NetParams` — (K, K) latency / inverse-bandwidth tensors): the
-speculative forward chain carries wire-delayed arrival times, so a
-referral consumes admission slack exactly as in the event heap's
-netsim integration (DESIGN.md §6).  ``net=None`` compiles the exact
-pre-netsim step; ``NetParams.zero`` reproduces its outcomes bit-for-bit
-(equivalence-guarded in tests/test_netsim.py).
+NetParams` — (K, K) latency / inverse-bandwidth tensors): a referral's
+wire time delays its re-arrival while the absolute deadline stays put,
+consuming admission slack exactly as in the heap's netsim integration
+(DESIGN.md §6).  ``net=None`` runs the same event machinery with every
+hop priced 0.0, so ``NetParams.zero`` reproduces its outcomes
+bit-for-bit (equivalence-guarded in tests/test_netsim.py).
 """
 from __future__ import annotations
 
@@ -56,7 +68,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import jax_queue as jq
-from repro.fleetsim.arrays import RequestArrays, TopologyArrays
+from repro.fleetsim.arrays import (RequestArrays, TopologyArrays,
+                                   event_bound)
 from repro.kernels import ref as kref
 from repro.netsim.link import NetParams
 
@@ -80,7 +93,15 @@ class SimParams(NamedTuple):
                    sla_scale=jnp.asarray(sla_scale, jnp.float32))
 
 
-class FleetState(NamedTuple):
+# per-request terminal record, packed into ONE i32 scatter per event (the
+# scan's hot loop is fusion-break bound on CPU — every scatter counts):
+# bits [0,8) forwards used, bit 8 discarded, bit 9 overflow, bits [10,..)
+# serving node + 1 (0 == not admitted).
+_INFO_DISC, _INFO_OVF, _INFO_SERVED = 1 << 8, 1 << 9, 10
+
+
+class EventState(NamedTuple):
+    """The scan carry: fleet ledgers + the event plane + outcome arrays."""
     # stacked head-pointer ledgers: (K, N) block geometry + per-slot request
     # identity; live blocks of node k occupy columns [head[k], head[k]+nq[k])
     starts: jnp.ndarray
@@ -93,10 +114,21 @@ class FleetState(NamedTuple):
     load: jnp.ndarray                  # (K,) pending ledger work (= host
     #                                     queue.pending_work(), active excl.)
     rr: jnp.ndarray                    # () i32 round-robin pointer
-    # the one (R,) carry: completion times scattered at pop time (pops hit
-    # arbitrary earlier requests, so this cannot ride the scan's stacked
-    # outputs like every per-request decision does)
-    completion: jnp.ndarray
+    # the event plane: fresh arrivals stream through `cursor`; deferred
+    # re-arrivals live in the sorted compact (B,) buffer (host-heap order)
+    cursor: jnp.ndarray                # () i32 next fresh arrival index
+    ev_time: jnp.ndarray               # (B,) event times, +BIG past ev_n
+    ev_rid: jnp.ndarray                # (B,) i32 request dense index
+    ev_meta: jnp.ndarray               # (B,) i32 node << hop_bits | hops
+    ev_n: jnp.ndarray                  # () i32 buffered event count
+    ev_dropped: jnp.ndarray            # () i32 pushes lost to a full buffer
+    sat_events: jnp.ndarray            # () i32 events that consulted a full
+    #                                    live window (undersized depth guard)
+    # per-request outcome carries (events touch arbitrary requests, so none
+    # of these can ride the scan's stacked outputs)
+    completion: jnp.ndarray            # (R,) pop-time / idle-start scatter
+    reqinfo: jnp.ndarray               # (R,) i32 packed terminal record
+    transfer: jnp.ndarray              # (R,) wire time paid on referrals
 
 
 class FleetMetrics(NamedTuple):
@@ -107,7 +139,7 @@ class FleetMetrics(NamedTuple):
     forwards: jnp.ndarray
     discarded: jnp.ndarray
     overflow: jnp.ndarray            # forced pushes dropped: no free slot
-    window_saturation: jnp.ndarray   # requests that consulted a full live
+    window_saturation: jnp.ndarray   # events that consulted a full live
     #                                  window — admission may diverge from
     #                                  the host's unbounded queue; keep 0
     mean_response_time: jnp.ndarray
@@ -116,6 +148,10 @@ class FleetMetrics(NamedTuple):
     completion: jnp.ndarray
     served_by: jnp.ndarray
     forwards_used: jnp.ndarray
+    transfer_time: jnp.ndarray       # total wire time spent on referrals
+    transfer_used: jnp.ndarray       # (R,) per-request wire time
+    event_overflow: jnp.ndarray      # events dropped (full buffer) or left
+    #                                  unprocessed at max_events; keep 0
 
     @property
     def met_rate(self):
@@ -126,7 +162,7 @@ class FleetMetrics(NamedTuple):
 # fast-forward: retire completions due strictly before t (work-conserving
 # pop chain), recording outcomes by slot rid.  Also the drain loop (t=inf).
 # ---------------------------------------------------------------------------
-def _retire(state: FleetState, t, R: int) -> FleetState:
+def _retire(state: EventState, t, R: int) -> EventState:
     K, N = state.starts.shape
     rows = jnp.arange(K)
 
@@ -161,22 +197,21 @@ def _retire(state: FleetState, t, R: int) -> FleetState:
 
 # ---------------------------------------------------------------------------
 # routing policies: pure selects over (load, adjacency, rng, trace row).
-# The whole candidate chain is speculative — routing never reads ledger
-# state (except batched_feasible's request-start mask, which is frozen for
-# the chain since nothing mutates before an admission) — so it runs before
-# the single fused feasibility pass.
+# Consulted at true event time — every earlier arrival, completion and
+# referral has already mutated the state the policy reads, exactly like the
+# host Router called from the heap's forward event.
 # ---------------------------------------------------------------------------
-def _route_next(policy: str, topo: TopologyArrays, load, cur, key, hop: int,
+def _route_next(policy: str, topo: TopologyArrays, load, cur, key, hop,
                 tgt_row, feas_all, rr):
-    """Forwarding target of ``cur``; returns (next_node, advanced_rr).
-
-    Consulted speculatively for every hop — callers resolve which hops
-    really happened afterwards (the rr pointer by realized forward count).
-    """
+    """Forwarding target of ``cur`` at hop ``hop`` (traced); returns
+    ``(next_node, advanced_rr)``.  Callers commit ``advanced_rr`` only when
+    the forward really happens (host Router semantics: the round-robin
+    pointer moves per ``choose()`` call)."""
     deg = topo.degree[cur]
     K = topo.adj.shape[0]
     if policy == "trace":
-        return jnp.maximum(tgt_row[hop], 0), rr
+        M = tgt_row.shape[0]
+        return jnp.maximum(tgt_row[jnp.minimum(hop, M - 1)], 0), rr
     if policy == "round_robin":
         # stable-id pointer: probe rr, rr+1, ... (mod K), skip non-neighbors;
         # the pointer advances past the chosen probe (host Router semantics)
@@ -190,7 +225,7 @@ def _route_next(policy: str, topo: TopologyArrays, load, cur, key, hop: int,
         return jnp.argmin(jnp.where(topo.adj[cur], load, jnp.inf)), rr
     if policy == "batched_feasible":
         # least-loaded neighbor that can still admit (cross-node mask from
-        # the fused feasibility kernel); least-loaded fallback when nobody
+        # the fused event_select scoring); least-loaded fallback when nobody
         # can — identical tie-breaking to the host router (lowest id)
         ok = topo.adj[cur] & feas_all
         best_ok = jnp.argmin(jnp.where(ok, load, jnp.inf))
@@ -219,167 +254,193 @@ def _route_next(policy: str, topo: TopologyArrays, load, cur, key, hop: int,
 
 
 # ---------------------------------------------------------------------------
-# the scan step: one request end-to-end (fast-forward, chain, apply)
+# the scan step: one event end-to-end (select, retire, test, route, apply)
 # ---------------------------------------------------------------------------
-def _step(state: FleetState, x, *, topo: TopologyArrays, key, policy: str,
-          max_forwards: int, discard_on_exhaust: bool, capacity: int,
-          depth: int, use_pallas: bool, R: int, use_network: bool,
-          net: Optional[NetParams]) -> FleetState:
-    i, t, p, drel, origin, tgt_row, payload = x
-    d = t + drel
+def _estep(state: EventState, _, *, topo: TopologyArrays, key, policy: str,
+           max_forwards: int, discard_on_exhaust: bool, capacity: int,
+           depth: int, use_pallas: bool, R: int, use_network: bool,
+           net: Optional[NetParams], fresh_cols, rear_cols, targets,
+           zero_net, hop_bits: int) -> Tuple[EventState, None]:
+    K = topo.speeds.shape[0]
     W = depth
+    dt = state.busy.dtype
+
+    # -- the two candidate events: next fresh arrival vs re-arrival head.
+    # Per-request constants ride pre-packed row matrices so each candidate
+    # costs ONE gather (the scan is fusion-break bound on CPU)
+    avail_a = state.cursor < R
+    ci = jnp.minimum(state.cursor, R - 1)
+    rid_b = state.ev_rid[0]
+    meta_b = state.ev_meta[0]
+    node_b = meta_b >> hop_bits
+    hops_b = meta_b & ((1 << hop_bits) - 1)
+    fa = fresh_cols[ci]                      # (arrival, origin, d, p, pay)
+    fb = rear_cols[rid_b]                    # (d, p, pay)
+    origin_a = fa[1].astype(jnp.int32)
+    cand_a = (fa[0], origin_a, fa[2], fa[3], fa[4], avail_a)
+    cand_b = (state.ev_time[0], node_b, fb[0], fb[1], fb[2],
+              state.ev_n > 0)
+
+    # plain-jnp merge: fresh wins timestamp ties (the host heap numbers
+    # every fresh arrival before the run — lower seq than any mid-run
+    # push), the buffer orders re-arrivals by stable (time, seq) insert
+    take_fresh = avail_a & ((cand_a[0] <= cand_b[0]) | ~cand_b[5])
+    t = jnp.where(take_fresh, cand_a[0], cand_b[0])
+    cur = jnp.where(take_fresh, cand_a[1], cand_b[1])
+
+    live = avail_a | cand_b[5]
+    rid = jnp.where(take_fresh, ci, rid_b)
+    hops = jnp.where(take_fresh, 0, hops_b)
+    d = jnp.where(take_fresh, cand_a[2], cand_b[2])
+    p = jnp.where(take_fresh, cand_a[3], cand_b[3])
+    pay = jnp.where(take_fresh, cand_a[4], cand_b[4])
+
+    # -- consume the event: bump the cursor or pop the buffer head --------
+    ev_time, (ev_rid, ev_meta), ev_n = jq.event_pop(
+        state.ev_time, (state.ev_rid, state.ev_meta),
+        state.ev_n, live & ~take_fresh)
+    state = state._replace(cursor=state.cursor + take_fresh.astype(jnp.int32),
+                           ev_time=ev_time, ev_rid=ev_rid, ev_meta=ev_meta,
+                           ev_n=ev_n)
+
+    # -- retire completions due strictly before the event (on a dead step
+    # t is +BIG, which simply starts the final drain early — harmless).
+    # Everything below — the fused scoring included — must see the
+    # POST-retire ledgers: the host pops every completion due before `t`
+    # ahead of the admission test, and a stale not-yet-retired block would
+    # inflate the pending-work sum and flip verdicts.
     state = _retire(state, t, R)
     ps = p / topo.speeds                                    # (K,) scaled
-    cpu_free = jnp.maximum(t, state.busy)
+    cpu_free_c = jnp.maximum(t, state.busy[cur])
 
-    feas_all = win_all = hrel_all = None
+    feas_all = j_all = cap_all = None
     if policy == "batched_feasible":
-        # whole-fleet window gather (one take): with zero network this
-        # feeds the single fused mask below; with a network each hop
-        # re-scores it at the referral's delayed arrival (link_cost)
+        # the event_select kernel's slot in the step: the two-way merge and
+        # the per-hop link_cost candidate mask fused into one pass over the
+        # whole fleet's live windows.  The kernel re-derives the merge from
+        # the same candidate scalars (bit-identical to the jnp merge above,
+        # and load-bearing inside: the selected node picks which latency /
+        # inverse-bandwidth row the scoring reads).
         w0_all = jnp.clip(state.head, 0, capacity - W)
         cols = w0_all[:, None] + jnp.arange(W)[None, :]
         win_all = lambda a: jnp.take_along_axis(a, cols, axis=1)
         hrel_all = state.head - w0_all
-    if policy == "batched_feasible" and not use_network:
-        # this is the Pallas fleet-feasibility kernel's slot in the step
+        lat, ibw = (net.latency, net.inv_bw) if use_network \
+            else (zero_net, zero_net)
         if use_pallas:
             from repro.kernels import ops as kops
-            feas_all, _ = kops.fleet_feasibility(
-                win_all(state.starts), win_all(state.ends),
-                win_all(state.sizes), state.nq, ps, d, cpu_free, hrel_all)
+            sel = kops.event_select(
+                *cand_a, *cand_b, win_all(state.starts),
+                win_all(state.ends), win_all(state.sizes), state.nq,
+                hrel_all, topo.speeds, state.busy, lat, ibw)
         else:
-            feas_all, _, _, _ = kref.fleet_search_ref(
-                win_all(state.starts), win_all(state.ends),
-                win_all(state.sizes), state.nq, ps, d, cpu_free, hrel_all)
+            sel = kref.event_select_ref(
+                *cand_a, *cand_b, win_all(state.starts),
+                win_all(state.ends), win_all(state.sizes), state.nq,
+                hrel_all, topo.speeds, state.busy, lat, ibw)
+        take_fresh, t, cur, feas_all, _, j_all, cap_all, _ = sel
 
-    # speculative candidate chain: v[h] is where the request would sit
-    # after h forwards (arriving at t_chain[h] once wire costs are paid);
-    # the rr pointer is resolved by the realized count
-    kreq = jax.random.fold_in(key, i)
-    vs, rrs = [origin], [state.rr]
-    cur, rr = origin, state.rr
-    t_cur = t
-    ts = [t_cur]
-    for hop in range(max_forwards):
-        feas_h = feas_all
-        if policy == "batched_feasible" and use_network:
-            # per-hop mask: each candidate scored at its delayed arrival
-            # t_cur + delay(cur, cand) — the fused link_cost kernel's slot
-            if use_pallas:
-                from repro.kernels import ops as kops
-                feas_h, _, _ = kops.link_cost(
-                    win_all(state.starts), win_all(state.ends),
-                    win_all(state.sizes), state.nq, ps, d, state.busy,
-                    hrel_all, t_cur, net.latency[cur], net.inv_bw[cur],
-                    payload)
-            else:
-                feas_h, _, _ = kref.link_cost_ref(
-                    win_all(state.starts), win_all(state.ends),
-                    win_all(state.sizes), state.nq, ps, d, state.busy,
-                    hrel_all, t_cur, net.latency[cur], net.inv_bw[cur],
-                    payload)
-        nxt, rr = _route_next(policy, topo, state.load, cur, kreq, hop,
-                              tgt_row, feas_h, rr)
-        if use_network:
-            # the hop's wire cost — latency plus frame serialization
-            # (DESIGN.md §6) — as two scalar gathers, not a (K, K)
-            # elementwise product per scan step
-            t_cur = t_cur + net.latency[cur, nxt] + payload * net.inv_bw[cur, nxt]
-        ts.append(t_cur)
-        cur = nxt
-        vs.append(cur)
-        rrs.append(rr)
-    v = jnp.stack(vs)                                       # (H,)
-    rr_stack = jnp.stack(rrs)
+    # -- admission test at the event's node -------------------------------
+    w0c = jnp.clip(state.head[cur], 0, capacity - W)
+    hrel_c = state.head[cur] - w0c
 
-    # gather each candidate's live window [w0, w0 + W) — all math below is
-    # depth-wide, not buffer-wide (the retired prefix beyond the window is
-    # dead weight the scan never has to touch again)
-    w0 = jnp.clip(state.head[v], 0, capacity - W)
-    head_rel = state.head[v] - w0
+    def win_row(buf):
+        return jax.lax.dynamic_slice(buf, (cur, w0c), (1, W))[0]
 
-    def win(buf, h):
-        return jax.lax.dynamic_slice(buf[v[h]], (w0[h],), (W,))
-
-    H = max_forwards + 1
-    starts_w = jnp.stack([win(state.starts, h) for h in range(H)])
-    ends_w = jnp.stack([win(state.ends, h) for h in range(H)])
-    sizes_w = jnp.stack([win(state.sizes, h) for h in range(H)])
-
-    # the chain's per-candidate CPU-free floor: with a network the request
-    # only reaches candidate h at t_chain[h], so the wire time comes
-    # straight out of the admission slack — a referral can cause a miss
-    if use_network:
-        t_chain = jnp.stack(ts)                             # (H,)
-        cpu_free_v = jnp.maximum(t_chain, state.busy[v])
+    starts_w, ends_w, sizes_w = (win_row(state.starts), win_row(state.ends),
+                                 win_row(state.sizes))
+    if policy == "batched_feasible":
+        # the fused pass already scored every node — including `cur` itself
+        # at its true arrival (zero net diagonal); gather its verdict
+        ok = feas_all[cur]
+        j, cap = j_all[cur], cap_all[cur]
     else:
-        cpu_free_v = cpu_free[v]
+        okv, jv, capv, _ = kref.fleet_search_ref(
+            starts_w[None], ends_w[None], sizes_w[None], state.nq[cur][None],
+            ps[cur][None], d, cpu_free_c[None], hrel_c[None])
+        ok, j, cap = okv[0], jv[0], capv[0]
 
-    # one fused feasibility + geometry pass over the candidates' windows
-    # (the window-full check doubles as the buffer-room check: w0 clamps to
-    # capacity - W, so tail_rel == W <=> head + nq == capacity)
-    ok, j, cap, _ = kref.fleet_search_ref(
-        starts_w, ends_w, sizes_w, state.nq[v], ps[v], d, cpu_free_v,
-        head_rel)
+    # -- decide: admit / forward / force / discard ------------------------
+    exhausted = (hops >= max_forwards) | (topo.degree[cur] == 0)
+    feas_evt = live & ok
+    forced_req = live & ~ok & exhausted & (not discard_on_exhaust)
+    disc_evt = live & ~ok & exhausted & discard_on_exhaust
+    fwd = live & ~ok & ~exhausted
 
-    # stop position: first candidate that admits or exhausts the chain
-    # (degree 0 exhausts early; the M-th hop always stops)
-    exh = (topo.degree[v] == 0).at[max_forwards].set(True)
-    h_star = jnp.argmax(ok | exh)
-    feas_at = ok[h_star]
-    dst = v[h_star]
-    w0_d = w0[h_star]
-    nfwd = h_star
-    discarded = ~feas_at & discard_on_exhaust
-    forced_req = ~feas_at & (not discard_on_exhaust)
-    state = state._replace(rr=rr_stack[nfwd])
+    # -- forward: pick the target NOW (true event time) and defer the
+    # re-arrival to t + transfer_delay via a stable sorted insert ---------
+    kreq = jax.random.fold_in(key, rid) \
+        if policy in ("random", "power_of_two") else None
+    tgt_row = targets[rid] if policy == "trace" else None
+    nxt, rr_adv = _route_next(policy, topo, state.load, cur, kreq, hops,
+                              tgt_row, feas_all, state.rr)
+    if use_network:
+        # the hop's wire cost — latency plus frame serialization
+        # (DESIGN.md §6) — as two scalar gathers
+        delay = net.latency[cur, nxt] + pay * net.inv_bw[cur, nxt]
+    else:
+        delay = jnp.zeros((), dt)
+    ev_time, (ev_rid, ev_meta), ev_n, dropped = jq.event_push(
+        state.ev_time, (state.ev_rid, state.ev_meta),
+        state.ev_n, t + delay, (rid, (nxt << hop_bits) | (hops + 1)), fwd)
+    state = state._replace(
+        ev_time=ev_time, ev_rid=ev_rid, ev_meta=ev_meta,
+        ev_n=ev_n, ev_dropped=state.ev_dropped + dropped.astype(jnp.int32))
+    if policy == "round_robin":
+        state = state._replace(rr=jnp.where(fwd, rr_adv, state.rr))
 
-    # apply at dst, within its window (jax_queue.insert_at — the shared
-    # closed-form cascade — with the pre-computed search results)
-    room = head_rel[h_star] + state.nq[dst] < W
+    # -- apply at cur, within its window (jax_queue.insert_at — the shared
+    # closed-form cascade — with the pre-computed search results) ---------
+    room = hrel_c + state.nq[cur] < W
     forced_ok = forced_req & room
-    ovf = forced_req & ~room
-    # a consulted candidate whose live window is exhausted can diverge from
-    # the host's unbounded queue even on the feasible path (its admission
-    # test reports "no room" where the host might admit) — surface it
-    sat = jnp.any((head_rel + state.nq[v] >= W)
-                  & (jnp.arange(max_forwards + 1) <= h_star))
-    t_dst = t_chain[h_star] if use_network else t
-    idle = state.busy[dst] < t_dst
-    sr_w = jax.lax.dynamic_slice(state.slot_rid[dst], (w0_d,), (W,))
+    ovf_evt = forced_req & ~room
+    # a consulted node whose live window is exhausted can diverge from the
+    # host's unbounded queue even on the feasible path (its admission test
+    # reports "no room" where the host might admit) — surface it
+    sat_evt = live & (hrel_c + state.nq[cur] >= W)
+    idle = state.busy[cur] < t
+    sr_w = win_row(state.slot_rid)
     n_starts, n_ends, n_sizes, admitted, (n_sr,) = jq.insert_at(
-        starts_w[h_star], ends_w[h_star], sizes_w[h_star],
-        head_rel[h_star], state.nq[dst], feas_at, forced_ok,
-        j[h_star], cap[h_star], ps[dst], cpu_free_v[h_star],
-        meta=(sr_w,), meta_vals=(i,))
+        starts_w, ends_w, sizes_w, hrel_c, state.nq[cur], feas_evt,
+        forced_ok, j, cap, ps[cur], cpu_free_c, meta=(sr_w,),
+        meta_vals=(rid,))
 
     # idle CPU: the host engine pushes then immediately pops — net effect is
     # the request starts at its (wire-delayed) arrival and never enters
     # the ledger
     start_now = admitted & idle
     queue_it = admitted & ~idle
-    c_now = t_dst + ps[dst]
+    c_now = t + ps[cur]
 
     def put(buf, new, old):
         return jax.lax.dynamic_update_slice(
-            buf, jnp.where(queue_it, new, old)[None, :], (dst, w0_d))
+            buf, jnp.where(queue_it, new, old)[None, :], (cur, w0c))
 
+    # the packed terminal record: one (R,) scatter instead of four
+    terminal = admitted | disc_evt | ovf_evt
+    info = (hops
+            + jnp.where(disc_evt, _INFO_DISC, 0)
+            + jnp.where(ovf_evt, _INFO_OVF, 0)
+            + jnp.where(admitted, (cur + 1) << _INFO_SERVED, 0))
+    rid_if = lambda flag: jnp.where(flag, rid, R)           # R => dropped
     state = state._replace(
-        starts=put(state.starts, n_starts, starts_w[h_star]),
-        ends=put(state.ends, n_ends, ends_w[h_star]),
-        sizes=put(state.sizes, n_sizes, sizes_w[h_star]),
+        starts=put(state.starts, n_starts, starts_w),
+        ends=put(state.ends, n_ends, ends_w),
+        sizes=put(state.sizes, n_sizes, sizes_w),
         slot_rid=put(state.slot_rid, n_sr, sr_w),
-        nq=state.nq.at[dst].add(queue_it.astype(jnp.int32)),
-        load=state.load.at[dst].add(jnp.where(queue_it, ps[dst], 0.0)),
-        busy=state.busy.at[dst].set(
-            jnp.where(start_now, c_now, state.busy[dst])),
+        nq=state.nq.at[cur].add(queue_it.astype(jnp.int32)),
+        load=state.load.at[cur].add(jnp.where(queue_it, ps[cur], 0.0)),
+        busy=state.busy.at[cur].set(
+            jnp.where(start_now, c_now, state.busy[cur])),
+        sat_events=state.sat_events + sat_evt.astype(jnp.int32),
+        completion=state.completion.at[rid_if(start_now)].set(
+            c_now, mode="drop"),
+        reqinfo=state.reqinfo.at[rid_if(terminal)].set(info, mode="drop"),
     )
-    # everything keyed by the *current* request rides the scan's stacked
-    # outputs — only pop-time completions need the (R,) carry
-    y = (jnp.where(admitted, dst, -1), discarded, ovf, start_now,
-         jnp.where(start_now, c_now, 0.0), nfwd, sat)
-    return state, y
+    if use_network:
+        state = state._replace(
+            transfer=state.transfer.at[rid_if(fwd)].add(delay, mode="drop"))
+    return state, None
 
 
 # ---------------------------------------------------------------------------
@@ -388,17 +449,25 @@ def _step(state: FleetState, x, *, topo: TopologyArrays, key, policy: str,
 @functools.partial(
     jax.jit, static_argnames=("policy", "max_forwards", "discard_on_exhaust",
                               "capacity", "depth", "use_pallas",
-                              "use_network"))
+                              "use_network", "max_events", "event_buf"))
 def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
               targets: jnp.ndarray, net: Optional[NetParams] = None, *,
               policy: str, max_forwards: int, discard_on_exhaust: bool,
               capacity: int, depth: int, use_pallas: bool,
-              use_network: bool = False) -> FleetMetrics:
+              use_network: bool = False,
+              max_events: Optional[int] = None,
+              event_buf: Optional[int] = None) -> FleetMetrics:
     R = reqs.arrival.shape[0]
     K = topo.speeds.shape[0]
     N = capacity
     dt = reqs.arrival.dtype
-    state = FleetState(
+    E = event_bound(R, max_forwards) if max_events is None else max_events
+    B = min(R, 1024) if event_buf is None else event_buf
+    if max_forwards >= (1 << 8):     # packed reqinfo holds hops in 8 bits
+        raise ValueError("max_forwards must be < 256 (packed terminal "
+                         f"record), got {max_forwards}")
+    hop_bits = max(max_forwards + 1, 2).bit_length()
+    state = EventState(
         starts=jnp.full((K, N), jq.BIG, dt),
         ends=jnp.full((K, N), jq.BIG, dt),
         sizes=jnp.zeros((K, N), dt),
@@ -408,25 +477,44 @@ def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
         busy=jnp.zeros((K,), dt),
         load=jnp.zeros((K,), dt),
         rr=jnp.zeros((), jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+        ev_time=jnp.full((B,), jq.BIG, dt),
+        ev_rid=jnp.zeros((B,), jnp.int32),
+        ev_meta=jnp.zeros((B,), jnp.int32),
+        ev_n=jnp.zeros((), jnp.int32),
+        ev_dropped=jnp.zeros((), jnp.int32),
+        sat_events=jnp.zeros((), jnp.int32),
         completion=jnp.zeros((R,), dt),
+        reqinfo=jnp.zeros((R,), jnp.int32),
+        transfer=jnp.zeros((R,), dt),
     )
     key = jax.random.PRNGKey(params.seed)
-    step = functools.partial(
-        _step, topo=topo, key=key, policy=policy, max_forwards=max_forwards,
-        discard_on_exhaust=discard_on_exhaust, capacity=capacity,
-        depth=depth, use_pallas=use_pallas, R=R, use_network=use_network,
-        net=net)
     d_abs = reqs.arrival + reqs.rel_deadline * params.sla_scale
     payload = (reqs.payload if reqs.payload is not None
                else jnp.zeros_like(reqs.arrival))
-    xs = (jnp.arange(R, dtype=jnp.int32), reqs.arrival, reqs.proc,
-          reqs.rel_deadline * params.sla_scale, reqs.origin, targets,
-          payload)
-    state, ys = jax.lax.scan(step, state, xs)
+    # per-request constants packed into row matrices: one gather per
+    # candidate per step instead of five (origin rides as f32 — exact for
+    # any node id below 2^24)
+    fresh_cols = jnp.stack([reqs.arrival, reqs.origin.astype(dt), d_abs,
+                            reqs.proc, payload], axis=1)
+    rear_cols = jnp.stack([d_abs, reqs.proc, payload], axis=1)
+    step = functools.partial(
+        _estep, topo=topo, key=key, policy=policy, max_forwards=max_forwards,
+        discard_on_exhaust=discard_on_exhaust, capacity=capacity,
+        depth=depth, use_pallas=use_pallas, R=R, use_network=use_network,
+        net=net, fresh_cols=fresh_cols, rear_cols=rear_cols,
+        targets=targets, zero_net=jnp.zeros((K, K), dt), hop_bits=hop_bits)
+    state, _ = jax.lax.scan(step, state, None, length=E)
+    unprocessed = (R - state.cursor) + state.ev_n
     state = _retire(state, jnp.asarray(jnp.inf, dt), R)     # drain
 
-    served_by, disc, ovf, start_now, c_now, nfwd, sat = ys
-    completion = jnp.where(start_now, c_now, state.completion)
+    # unpack the per-request terminal records
+    info = state.reqinfo
+    nfwd = info & ((1 << 8) - 1)
+    disc = (info & _INFO_DISC) != 0
+    ovf = (info & _INFO_OVF) != 0
+    served_by = (info >> _INFO_SERVED) - 1
+    completion = state.completion
     has_c = completion > 0
     met = has_c & (completion <= d_abs + _MET_EPS)
     outcome = jnp.where(
@@ -444,13 +532,16 @@ def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
         forwards=jnp.sum(nfwd).astype(jnp.int32),
         discarded=jnp.sum(disc).astype(jnp.int32),
         overflow=jnp.sum(ovf).astype(jnp.int32),
-        window_saturation=jnp.sum(sat).astype(jnp.int32),
+        window_saturation=state.sat_events,
         mean_response_time=resp / jnp.maximum(1, n_proc),
         end_time=end_time,
         outcome=outcome,
         completion=completion,
         served_by=served_by,
         forwards_used=nfwd,
+        transfer_time=jnp.sum(state.transfer),
+        transfer_used=state.transfer,
+        event_overflow=(state.ev_dropped + unprocessed).astype(jnp.int32),
     )
 
 
@@ -460,7 +551,9 @@ def simulate(reqs: RequestArrays, topo: TopologyArrays,
              capacity: int = 256, depth: Optional[int] = None,
              targets: Optional[jnp.ndarray] = None,
              use_pallas: bool = False,
-             net: Optional[NetParams] = None) -> FleetMetrics:
+             net: Optional[NetParams] = None,
+             max_events: Optional[int] = None,
+             event_buf: Optional[int] = None) -> FleetMetrics:
     """Run the full fleet simulation as one device call.
 
     ``reqs``/``topo`` come from :mod:`repro.fleetsim.arrays` (or
@@ -472,20 +565,29 @@ def simulate(reqs: RequestArrays, topo: TopologyArrays,
     size it at the node's total admission count, not its peak depth.
     ``depth`` (default ``capacity``) is the live-window width the per-step
     math runs over — size it at peak queue depth + slack; smaller depth =
-    faster steps.  Undersizing is never silent: a forced push that finds
-    no free slot is reported in ``metrics.overflow``, and any request that
-    merely *consulted* a node with an exhausted window (where the
-    admission verdict could differ from the host's unbounded queue) counts
-    into ``metrics.window_saturation`` — size capacity/depth so both stay
-    0.  ``targets`` replays recorded forwarding choices (policy="trace",
-    shape (R, max_forwards)).
+    faster steps.  ``max_events`` bounds the scan length (default
+    ``R * (max_forwards + 1)``, the exact worst case — every request
+    forwarded to exhaustion; size it at ``R + expected forwards + slack``
+    for faster runs) and ``event_buf`` the in-flight re-arrival buffer
+    (default ``min(R, 1024)``).  Undersizing any of the four is never
+    silent: a forced push that finds no free slot is reported in
+    ``metrics.overflow``, a request that merely *consulted* a node with
+    an exhausted window counts into ``metrics.window_saturation``, and a
+    re-arrival that could not be buffered or processed counts into
+    ``metrics.event_overflow`` — size so all three stay 0.  ``targets``
+    replays recorded forwarding choices (policy="trace", shape
+    (R, max_forwards)).
 
     ``net`` (a :class:`repro.netsim.NetParams`) prices every referral
-    hop: the wire time ``latency[u, v] + payload · inv_bw[u, v]`` delays
-    the request's arrival along the speculative forward chain, consuming
-    admission slack (DESIGN.md §6).  ``net=None`` compiles the exact
-    pre-netsim step — and ``NetParams.zero`` reproduces its outcomes
-    bit-for-bit (equivalence-guarded).
+    hop: the wire time ``latency[u, v] + payload · inv_bw[u, v]`` defers
+    the request's re-arrival event to ``t + transfer_delay`` while its
+    absolute deadline stays put, consuming admission slack (DESIGN.md
+    §6).  Outcomes are exact against the event-heap Orchestrator under
+    any pricing — the event-time scan replays the heap's interleaving of
+    arrivals, completions and referrals event for event (DESIGN.md §7).
+    ``net=None`` prices every hop 0.0 through the same machinery, and
+    ``NetParams.zero`` reproduces its outcomes bit-for-bit
+    (equivalence-guarded).
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown fleetsim policy {policy!r}; "
@@ -512,13 +614,15 @@ def simulate(reqs: RequestArrays, topo: TopologyArrays,
                      net, policy=policy, max_forwards=max_forwards,
                      discard_on_exhaust=discard_on_exhaust,
                      capacity=capacity, depth=depth, use_pallas=use_pallas,
-                     use_network=use_network)
+                     use_network=use_network, max_events=max_events,
+                     event_buf=event_buf)
 
 
 def simulate_fn(*, policy: str = "random", max_forwards: int = 2,
                 discard_on_exhaust: bool = False, capacity: int = 256,
                 depth: Optional[int] = None, use_pallas: bool = False,
-                network: bool = False):
+                network: bool = False, max_events: Optional[int] = None,
+                event_buf: Optional[int] = None):
     """The jitted simulator with statics bound — the thing to ``jax.vmap``.
 
     Signature of the returned function:
@@ -537,9 +641,17 @@ def simulate_fn(*, policy: str = "random", max_forwards: int = 2,
         run = fleetsim.simulate_fn(policy="least_loaded", network=True)
         grid = jax.vmap(run, in_axes=(None, None, None, None, 0))
         metrics = grid(reqs, topo, params, tgt, stacked_net_params)
+
+    ``max_events``/``event_buf`` size the event-time scan (see
+    :func:`simulate`; defaults: the exact worst-case scan bound, and a
+    ``min(R, 1024)``-slot re-arrival buffer).  A sweep's sizing must
+    cover its heaviest cell — undersizing surfaces in
+    ``metrics.event_overflow``, never silently, so check it across the
+    whole sweep.
     """
     return functools.partial(
         _simulate, policy=policy, max_forwards=max_forwards,
         discard_on_exhaust=discard_on_exhaust, capacity=capacity,
         depth=capacity if depth is None else min(depth, capacity),
-        use_pallas=use_pallas, use_network=network)
+        use_pallas=use_pallas, use_network=network, max_events=max_events,
+        event_buf=event_buf)

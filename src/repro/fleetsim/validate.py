@@ -1,25 +1,30 @@
 """Cross-validation: fleetsim vs the event-heap Orchestrator.
 
-The contract (DESIGN.md §5): on identical workloads the scan-based fleet
-simulator reproduces the event heap's per-request outcomes
+The contract (DESIGN.md §5, §7): on identical workloads — under **any**
+link pricing, zero or priced — the event-time fleet simulator reproduces
+the event heap's per-request ``(outcome, serving node, transfer time)``
 
 * **exactly** for deterministic forwarding policies (``round_robin``,
   ``batched_feasible``), and
 * **exactly under trace replay** for the stochastic ones — the host run
   records every forwarding choice through ``Hooks.on_forward`` and
   fleetsim replays it (``policy="trace"``), so any dynamics divergence
-  (admission, timing, tie-breaking) still surfaces as an outcome mismatch
-  while the Mersenne-vs-threefry rng stream difference is factored out,
+  (admission, timing, tie-breaking, event ordering) still surfaces as an
+  outcome mismatch while the Mersenne-vs-threefry rng stream difference
+  is factored out,
 
 modulo float32-boundary flips: the host queue schedules in float64, the
 device ledger in float32, so a request whose feasibility / deadline margin
 is below f32 resolution (~1e-2 at the paper's 1e5-UT timescale) can land
-on the other side of the test.  Empirically this is rare (see
-EXPERIMENTS.md §Fleetsim); ``run_validation`` reports exact counts and the
-per-request mismatch list so the tolerance is measured, not assumed.
+on the other side of the test — and under a priced network two re-arrival
+events closer together than f32 resolution can swap order.  Empirically
+neither has produced a mismatch (see EXPERIMENTS.md §Netsim);
+``run_validation`` reports exact counts and the per-request mismatch list
+so the tolerance is measured, not assumed.
 
     PYTHONPATH=src python -m repro.fleetsim.validate            # 3 scenarios
     PYTHONPATH=src python -m repro.fleetsim.validate --policy round_robin
+    PYTHONPATH=src python -m repro.fleetsim.validate --net campus
 """
 from __future__ import annotations
 
@@ -38,6 +43,9 @@ from repro.orchestration import (Hooks, Orchestrator, Router, Topology,
 # host policies fleetsim replays move-for-move without a trace
 DETERMINISTIC = ("round_robin", "batched_feasible")
 
+#: |host - fleet| tolerance on per-request wire time (f32 sums vs f64)
+TRANSFER_ATOL = 1e-2
+
 
 @dataclasses.dataclass
 class ValidationReport:
@@ -48,37 +56,44 @@ class ValidationReport:
     host: Dict[str, float]
     fleet: Dict[str, float]
     outcome_mismatches: int          # per-request outcome-code disagreements
+    node_mismatches: int             # per-request serving-node disagreements
+    transfer_max_err: float          # max |per-request wire time| difference
     met_diff_pp: float               # |met-rate difference| in percent points
     capacity: int
 
     @property
     def exact(self) -> bool:
-        return self.outcome_mismatches == 0
+        return (self.outcome_mismatches == 0 and self.node_mismatches == 0
+                and self.transfer_max_err <= TRANSFER_ATOL)
 
     def row(self) -> str:
         tag = "exact" if self.exact else \
-            f"{self.outcome_mismatches} mismatches"
+            f"{self.outcome_mismatches}o/{self.node_mismatches}n mismatches"
         return (f"{self.scenario:18s} seed={self.seed} {self.policy:16s} "
                 f"met {self.host['met_deadline']:6.0f}/{self.fleet['met_deadline']:6.0f} "
                 f"fwd {self.host['forwards']:6.0f}/{self.fleet['forwards']:6.0f} "
                 f"disc {self.host['discarded']:5.0f}/{self.fleet['discarded']:5.0f} "
-                f"dmet {self.met_diff_pp:5.3f}pp  [{tag}]")
+                f"dmet {self.met_diff_pp:5.3f}pp "
+                f"dwire {self.transfer_max_err:7.1e}  [{tag}]")
 
 
 def _host_run(workload: Workload, topology: Topology, seed: int,
               policy: str, max_forwards: int, discard_on_exhaust: bool,
               network: Optional[LinkModel] = None):
-    """Event-heap reference run; returns (requests, result, targets, depth).
+    """Event-heap reference run.
 
+    Returns ``(requests, result, targets, peak, depth, transfer)`` —
     ``targets[dense_idx, hop]`` records every forwarding choice in the
-    order the heap consumed it; ``peak`` is the largest per-node admission
-    count, which sizes the fleet slot buffer (head-pointer rows retire
-    slots without reusing them, so capacity tracks total admissions, not
-    peak depth).
+    order the heap consumed it, ``transfer[dense_idx]`` the wire time the
+    request paid on referrals, ``peak`` the largest per-node admission
+    count (sizes the fleet slot buffer: head-pointer rows retire slots
+    without reusing them, so capacity tracks total admissions, not peak
+    depth), ``depth`` the deepest queue observed.
     """
     requests = workload.generate(seed)
     idx = {r.rid: j for j, r in enumerate(requests)}
     targets = np.full((len(requests), max(max_forwards, 1)), -1, np.int32)
+    transfer = np.zeros((len(requests),), np.float64)
     hops = {}
     depth = 0
 
@@ -86,6 +101,9 @@ def _host_run(workload: Workload, topology: Topology, seed: int,
         h = hops.get(req.rid, 0)
         hops[req.rid] = h + 1
         targets[idx[req.rid], h] = dst.node_id
+        if network is not None:
+            transfer[idx[req.rid]] += network.transfer_delay(
+                src.node_id, dst.node_id, req.service)
 
     def on_admit(req, node, now, forced):
         nonlocal depth
@@ -100,15 +118,18 @@ def _host_run(workload: Workload, topology: Topology, seed: int,
                                     on_admit=on_admit))
     result = orch.run(requests)
     peak = max(n.admitted for n in result.per_node)
-    return requests, result, targets, peak, depth
+    return requests, result, targets, peak, depth, transfer
 
 
-def _host_outcomes(requests, result) -> np.ndarray:
+def _host_outcomes(requests, result):
+    """Per-request (outcome code, serving node) of the heap run."""
     out = np.full((len(requests),), fcore.DISCARDED, np.int32)
+    served = np.full((len(requests),), -1, np.int32)
     idx = {r.rid: j for j, r in enumerate(requests)}
     for r in result.completed:
         out[idx[r.rid]] = fcore.MET if r.met_deadline else fcore.LATE
-    return out
+        served[idx[r.rid]] = r.served_by
+    return out, served
 
 
 def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
@@ -120,11 +141,11 @@ def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
     """One (scenario, seed, policy) cross-validation cell.
 
     ``network`` runs BOTH engines under the link model (the host pays
-    transfer delays on forward events, fleetsim folds the same ``(K, K)``
-    costs into its chain scoring).  The exactness contract covers the
-    zero model — a priced network is an approximation cell (the scan
-    resolves a referral chain at its source step; arrivals that interleave
-    a multi-hop referral in the host can diverge, DESIGN.md §6).
+    transfer delays on forward events, fleetsim defers the re-arrival
+    event by the same ``(K, K)`` costs).  The exactness contract covers
+    priced networks as well as the zero model — the event-time scan
+    replays the heap's event interleaving exactly (DESIGN.md §7), so
+    outcome, serving node and per-request wire time are all compared.
     """
     workload = get_workload(scenario) if isinstance(scenario, str) \
         else scenario
@@ -134,13 +155,18 @@ def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
             else Topology.full_mesh(workload.n_nodes)
     if network is not None and network.n_nodes != topology.n_nodes:
         raise ValueError("network and topology disagree on node count")
-    requests, result, targets, peak, depth = _host_run(
+    requests, result, targets, peak, depth, host_tr = _host_run(
         workload, topology, seed, policy, max_forwards, discard_on_exhaust,
         network=network)
 
     if capacity is None:
         capacity = 1 << max(3, (peak + 2 - 1).bit_length())
     window = 1 << max(3, (depth + 2 - 1).bit_length())
+    # scan length: one step per heap arrival event (fresh + re-arrivals),
+    # sized off the host's realized forward count with generous slack —
+    # event_overflow is asserted 0 below, so undersizing cannot pass
+    max_events = min(len(requests) * (max_forwards + 1),
+                     len(requests) + 2 * result.forwards + 256)
     reqs, _, _ = pack_requests(
         requests, payload_fn=network.payload_of if network else None)
     fleet_policy = policy if policy in DETERMINISTIC else "trace"
@@ -148,23 +174,33 @@ def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
                        policy=fleet_policy, max_forwards=max_forwards,
                        discard_on_exhaust=discard_on_exhaust,
                        capacity=capacity, depth=window, targets=targets,
-                       net=network.net_params() if network else None)
+                       net=network.net_params() if network else None,
+                       max_events=max_events)
     assert int(m.overflow) == 0 and int(m.window_saturation) == 0, \
         f"fleet capacity {capacity}/depth {window} saturated " \
         f"(host peak admissions {peak}, depth {depth})"
+    assert int(m.event_overflow) == 0, \
+        f"event plane saturated (max_events {max_events}, " \
+        f"host forwards {result.forwards})"
 
-    host_out = _host_outcomes(requests, result)
+    host_out, host_served = _host_outcomes(requests, result)
     mismatches = int(np.sum(host_out != np.asarray(m.outcome)))
+    node_mismatches = int(np.sum(host_served != np.asarray(m.served_by)))
+    transfer_max_err = float(np.max(np.abs(
+        host_tr - np.asarray(m.transfer_used, np.float64)), initial=0.0))
     total = len(requests)
     host = dict(met_deadline=result.met_deadline, processed=result.processed,
                 forwards=result.forwards, discarded=result.discarded,
-                mean_response_time=result.mean_response_time)
+                mean_response_time=result.mean_response_time,
+                transfer_time=result.transfer_time)
     fleet = dict(met_deadline=int(m.met_deadline), processed=int(m.processed),
                  forwards=int(m.forwards), discarded=int(m.discarded),
-                 mean_response_time=float(m.mean_response_time))
+                 mean_response_time=float(m.mean_response_time),
+                 transfer_time=float(m.transfer_time))
     return ValidationReport(
         scenario=name, seed=seed, policy=policy, total=total,
         host=host, fleet=fleet, outcome_mismatches=mismatches,
+        node_mismatches=node_mismatches, transfer_max_err=transfer_max_err,
         met_diff_pp=100.0 * abs(host["met_deadline"]
                                 - fleet["met_deadline"]) / max(1, total),
         capacity=capacity)
@@ -179,12 +215,11 @@ def main() -> List[ValidationReport]:
     ap.add_argument("--policy", default="random")
     ap.add_argument("--discard", action="store_true")
     ap.add_argument("--net", default=None,
-                    help="run both engines under a link model: 'zero' "
-                         "(equivalence contract enforced — the netsim "
-                         "machinery must reproduce the free-network "
-                         "outputs exactly) or a profile name "
-                         "(campus/metro/wan; report-only, the scan is an "
-                         "approximation under priced networks)")
+                    help="run both engines under a link model: 'zero' or a "
+                         "priced preset (campus/metro/wan).  The exactness "
+                         "contract is enforced either way — the event-time "
+                         "scan replays the heap exactly under any pricing "
+                         "(DESIGN.md §7)")
     args = ap.parse_args()
     reports = []
     for sc in args.scenarios:
@@ -202,14 +237,14 @@ def main() -> List[ValidationReport]:
             print(rep.row(), flush=True)
     worst = max(r.met_diff_pp for r in reports)
     n_exact = sum(r.exact for r in reports)
-    enforce = args.net is None or args.net == "zero"
     violations = [r for r in reports
                   if r.met_diff_pp > 0.5
-                  or r.outcome_mismatches > 0.005 * r.total] if enforce else []
+                  or r.outcome_mismatches > 0.005 * r.total
+                  or r.node_mismatches > 0.005 * r.total]
     print(f"# {n_exact}/{len(reports)} cells exact; "
           f"worst met-rate delta {worst:.3f}pp "
-          + ("(contract: exact or <= 0.5pp, DESIGN.md §5)" if enforce else
-         f"(net={args.net}: approximation cells, report only — DESIGN.md §6)"))
+          f"(contract: exact or <= 0.5pp f32-boundary flips, "
+          f"DESIGN.md §5/§7; net={args.net or 'none'})")
     if violations:
         raise SystemExit(
             f"equivalence contract violated in {len(violations)} cell(s): "

@@ -17,6 +17,12 @@ Pure-jnp oracle: :func:`repro.kernels.ref.fleet_feasibility_ref`.  On
 non-TPU backends the wrapper in :mod:`repro.kernels.ops` runs this body
 in interpret mode (traced once under jit, so it lowers to ordinary XLA —
 the CPU fallback costs nothing at runtime).
+
+Status: the event-time fleet scan (DESIGN.md §7) folds this scoring into
+:mod:`repro.kernels.event_select`; ``fleet_feasibility`` remains the
+standalone cross-node admission kernel (no event merge, no network) for
+router-style batch scoring and as a parity anchor for the shared
+geometry.
 """
 from __future__ import annotations
 

@@ -18,6 +18,12 @@ identical to the fleet-feasibility kernel.
 Pure-jnp oracle: :func:`repro.kernels.ref.link_cost_ref` (bit-for-bit on
 the feasibility bits).  Off-TPU the :mod:`repro.kernels.ops` wrapper
 runs this body in interpret mode, lowering to ordinary XLA.
+
+Status: the event-time fleet scan (DESIGN.md §7) now scores referrals
+through :mod:`repro.kernels.event_select`, which fuses this kernel's
+wire-delay mask with the next-event merge — ``link_cost`` remains the
+standalone one-source-many-candidates primitive (and the parity anchor
+for the shared admission geometry) for consumers outside the scan.
 """
 from __future__ import annotations
 

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import event_select as _es
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fleet_feasibility as _ff
 from repro.kernels import link_cost as _lc
@@ -90,6 +91,28 @@ def fleet_feasibility(starts: jnp.ndarray, ends: jnp.ndarray,
     """
     return _ff.fleet_feasibility_fwd(starts, ends, sizes, n, ps, d, cpu_free,
                                      head, interpret=_interpret())
+
+
+@jax.jit
+def event_select(t_a, node_a, d_a, p_a, pay_a, avail_a,
+                 t_b, node_b, d_b, p_b, pay_b, avail_b,
+                 starts: jnp.ndarray, ends: jnp.ndarray, sizes: jnp.ndarray,
+                 n: jnp.ndarray, head, speeds: jnp.ndarray,
+                 busy: jnp.ndarray, latency: jnp.ndarray,
+                 inv_bw: jnp.ndarray):
+    """Fused next-event merge + per-hop referral scoring (DESIGN.md §7).
+
+    Candidate scalars ``(t, node, d, p, payload, avail)`` for the fresh
+    arrival (``_a``) and the re-arrival buffer head (``_b``); stacked
+    (K, N) ledger windows; full (K, K) NetParams tensors (zeros for a
+    network-free run).  Returns ``(take_fresh, t, node, feasible (K,),
+    arrive (K,), j (K,), cap (K,), load (K,))``; oracle:
+    :func:`repro.kernels.ref.event_select_ref`.
+    """
+    return _es.event_select_fwd(t_a, node_a, d_a, p_a, pay_a, avail_a,
+                                t_b, node_b, d_b, p_b, pay_b, avail_b,
+                                starts, ends, sizes, n, head, speeds, busy,
+                                latency, inv_bw, interpret=_interpret())
 
 
 @jax.jit

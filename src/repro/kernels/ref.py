@@ -96,6 +96,48 @@ def link_cost_ref(starts: jnp.ndarray, ends: jnp.ndarray,
     return feas, arrive, load
 
 
+def event_select_ref(t_a, node_a, d_a, p_a, pay_a, avail_a,
+                     t_b, node_b, d_b, p_b, pay_b, avail_b,
+                     starts: jnp.ndarray, ends: jnp.ndarray,
+                     sizes: jnp.ndarray, n: jnp.ndarray, head,
+                     speeds: jnp.ndarray, busy: jnp.ndarray,
+                     latency: jnp.ndarray, inv_bw: jnp.ndarray,
+                     eps: float = 1e-6):
+    """Fused next-event merge + per-hop referral scoring (pure jnp).
+
+    Two candidate events — the next *fresh* arrival (``_a``) from the
+    sorted request stream and the head of the deferred *re-arrival*
+    buffer (``_b``), each ``(t, node, d, p, payload, avail)`` scalars —
+    are merged by ``(time, seq)`` order (fresh wins ties: the host heap
+    numbers every fresh arrival before the run, so a mid-run push never
+    outranks one at an equal timestamp).  The selected event is then
+    scored against all K candidate nodes at its network-delayed arrival
+    ``t + latency[node] + payload · inv_bw[node]`` (pass zero tensors
+    for a network-free run; the diagonal must be zero so the event's own
+    node is scored at its true arrival).
+
+    Returns ``(take_fresh, t, node, feasible (K,), arrive (K,), j (K,),
+    cap (K,), load (K,))`` — ``j``/``cap`` are the insertion slot and
+    window edge, so the event step applies the admission without a
+    second search.  The oracle for the Pallas ``event_select`` kernel.
+    """
+    K = starts.shape[0]
+    avail_a = jnp.asarray(avail_a, bool)
+    avail_b = jnp.asarray(avail_b, bool)
+    take_a = avail_a & ((jnp.asarray(t_a) <= jnp.asarray(t_b)) | ~avail_b)
+    t = jnp.where(take_a, t_a, t_b)
+    node = jnp.where(take_a, node_a, node_b)
+    d = jnp.where(take_a, d_a, d_b)
+    p = jnp.where(take_a, p_a, p_b)
+    payload = jnp.where(take_a, pay_a, pay_b)
+    ps = p / speeds.reshape(K)
+    arrive = t + latency[node].reshape(K) + payload * inv_bw[node].reshape(K)
+    free = jnp.maximum(arrive, busy.reshape(K))
+    feas, j, cap, load = fleet_search_ref(starts, ends, sizes, n, ps, d,
+                                          free, head, eps)
+    return take_a, t, node, feas, arrive, j, cap, load
+
+
 def fleet_search_ref(starts: jnp.ndarray, ends: jnp.ndarray,
                      sizes: jnp.ndarray, n: jnp.ndarray, ps: jnp.ndarray,
                      d: jnp.ndarray, cpu_free: jnp.ndarray, head=None,

@@ -22,8 +22,9 @@ v]``.  The zero model (``LinkModel.zero``) prices every hop at exactly
 their network-free outputs bit-for-bit under it (DESIGN.md §6).
 
 :class:`NetParams` is the device view — ``(K, K)`` latency and inverse-
-bandwidth tensors the fleet simulator folds into its speculative
-forward-chain scoring.  It is a NamedTuple of plain arrays, so it stacks
+bandwidth tensors the fleet simulator's event-time scan prices each
+referral hop with (the re-arrival event is deferred by exactly the wire
+time, DESIGN.md §7).  It is a NamedTuple of plain arrays, so it stacks
 with ``tree_map`` and joins :class:`repro.fleetsim.SimParams` as a
 vmappable sweep axis (a latency × bandwidth grid is one device call).
 """

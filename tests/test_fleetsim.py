@@ -51,6 +51,43 @@ def test_matches_orchestrator_heterogeneous_ring():
     assert rep.exact, rep.row()
 
 
+def test_batched_feasible_scores_post_retire_state():
+    """Regression: the fused event_select scoring must run on the
+    POST-retire ledgers.  At t=12 the d_abs=18 block has completed (busy
+    chain 5→10) but is not yet retired when the event is selected; scoring
+    the stale ledger inflates pending work (21 - (12+5) < 5 → bogus
+    infeasible) and forwards a request the host admits on the spot."""
+    from repro.core.request import Request, Service
+    from repro.orchestration import Workload
+
+    class _Fixed(Workload):
+        name = "stale-retire"
+        n_nodes = 2
+
+        def generate(self, seed):
+            return self._finish([
+                Request(service=Service("a", 1, "x", 5.0, 100.0),
+                        arrival_time=0.0, origin_node=0),
+                Request(service=Service("b", 1, "x", 5.0, 17.0),
+                        arrival_time=1.0, origin_node=0),
+                Request(service=Service("c", 1, "x", 5.0, 9.0),
+                        arrival_time=12.0, origin_node=0),
+            ])
+
+    rep = run_validation(_Fixed(), 0, policy="batched_feasible",
+                         topology=Topology.full_mesh(2))
+    assert rep.exact, rep.row()
+    assert rep.host["forwards"] == rep.fleet["forwards"] == 0
+    # and the Pallas kernel path agrees with the reference path on it
+    reqs, _, _ = pack_requests(_Fixed().generate(0))
+    ta = topology_arrays(Topology.full_mesh(2))
+    kw = dict(policy="batched_feasible", capacity=16, depth=16)
+    a = simulate(reqs, ta, SimParams.make(0), use_pallas=False, **kw)
+    b = simulate(reqs, ta, SimParams.make(0), use_pallas=True, **kw)
+    assert np.array_equal(np.asarray(a.outcome), np.asarray(b.outcome))
+    assert int(a.forwards) == int(b.forwards) == 0
+
+
 @pytest.mark.parametrize("scenario", ["paper/scenario1"])
 def test_matches_orchestrator_paper_scenario(scenario):
     """The acceptance contract on a real paper workload (seed 0): exact
@@ -221,6 +258,54 @@ def test_undersized_window_is_flagged_not_silent():
     sized = simulate(reqs, ta, SimParams.make(0), policy="least_loaded",
                      capacity=256, depth=128)
     assert int(sized.window_saturation) == 0
+
+
+def test_undersized_event_plane_is_flagged_not_silent():
+    """The event-time scan's two sizing knobs — scan length (max_events)
+    and the in-flight re-arrival buffer (event_buf) — must surface any
+    shortfall in metrics.event_overflow, never pass silently."""
+    from repro.fleetsim import NetParams, event_bound
+    reqs, _, _ = pack_requests(HOT.generate(0))
+    ta = topology_arrays(Topology.full_mesh(3))
+    R = reqs.arrival.shape[0]
+    kw = dict(policy="least_loaded", capacity=256, depth=128)
+    full = simulate(reqs, ta, SimParams.make(0), **kw)
+    assert int(full.event_overflow) == 0
+    assert event_bound(R, 2) == 3 * R
+    # scan shorter than the event stream: leftovers are counted
+    short = simulate(reqs, ta, SimParams.make(0), max_events=R // 2, **kw)
+    assert int(short.event_overflow) > 0
+    # a 1-slot buffer under a priced network (25 UT wire vs ~3.6 UT
+    # arrival gaps => many referrals in flight at once): drops counted
+    net = NetParams.uniform(3, 25.0)
+    tight = simulate(reqs, ta, SimParams.make(0), net=net, event_buf=1, **kw)
+    assert int(tight.event_overflow) > 0
+    sized = simulate(reqs, ta, SimParams.make(0), net=net, **kw)
+    assert int(sized.event_overflow) == 0
+
+
+def test_event_scan_orders_rearrivals_by_time_not_source():
+    """Direct check of the deferred-re-arrival contract: with a uniform
+    50 UT wire, a request forwarded at t re-arrives at t+50 — after every
+    fresh arrival in (t, t+50) — and its per-request transfer_used
+    records exactly the wire time paid."""
+    from repro.fleetsim import NetParams
+    reqs, _, _ = pack_requests(HOT.generate(0))
+    ta = topology_arrays(Topology.full_mesh(3))
+    m = simulate(reqs, ta, SimParams.make(0), policy="round_robin",
+                 capacity=256, depth=128, net=NetParams.uniform(3, 50.0))
+    nfwd = np.asarray(m.forwards_used)
+    assert nfwd.sum() > 0
+    np.testing.assert_allclose(np.asarray(m.transfer_used), nfwd * 50.0,
+                               rtol=1e-6)
+    assert float(m.transfer_time) == pytest.approx(float(nfwd.sum() * 50.0),
+                                                   rel=1e-6)
+    # a forwarded request can never complete before its wire-delayed
+    # arrival plus its own work
+    completion = np.asarray(m.completion)
+    done = completion > 0
+    floor = (np.asarray(reqs.arrival) + nfwd * 50.0 + np.asarray(reqs.proc))
+    assert (completion[done] >= floor[done] - 1e-2).all()
 
 
 def test_workload_to_arrays_round_trip():

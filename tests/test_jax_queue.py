@@ -90,6 +90,65 @@ def test_batched_replica_scoring_under_vmap():
     assert not bool(score[0, 0]) and bool(score[1, 0])
 
 
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.one_of(
+    st.tuples(st.just("push"), st.integers(0, 40).map(lambda i: i / 2.0)),
+    st.tuples(st.just("pop"), st.just(0.0))), min_size=1, max_size=30))
+def test_event_queue_matches_heapq(ops):
+    """The device event buffer replays heapq's (time, seq) order exactly —
+    including stable FIFO order among equal timestamps (side='right'
+    insertion == monotone sequence numbers)."""
+    import heapq
+    B = 32
+    keys = jnp.full((B,), jq.BIG, jnp.float32)
+    vals = (jnp.zeros((B,), jnp.int32),)
+    n = jnp.zeros((), jnp.int32)
+    heap, seq, popped_host, popped_dev = [], 0, [], []
+    for kind, t in ops:
+        if kind == "push":
+            heapq.heappush(heap, (t, seq))
+            keys, vals, n, dropped = jq.event_push(keys, vals, n,
+                                                   jnp.float32(t), (seq,),
+                                                   True)
+            assert not bool(dropped)
+            seq += 1
+        elif heap:
+            popped_host.append(heapq.heappop(heap))
+            popped_dev.append((float(keys[0]), int(vals[0][0])))
+            keys, vals, n = jq.event_pop(keys, vals, n, True)
+    assert popped_dev == [(t, s) for t, s in popped_host]
+    assert int(n) == len(heap)
+    # and the remaining buffer drains in heap order too
+    while heap:
+        t, s = heapq.heappop(heap)
+        assert (float(keys[0]), int(vals[0][0])) == (t, s)
+        keys, vals, n = jq.event_pop(keys, vals, n, True)
+
+
+def test_event_queue_overflow_and_noop_gating():
+    keys = jnp.full((4,), jq.BIG, jnp.float32)
+    vals = (jnp.zeros((4,), jnp.int32),)
+    n = jnp.zeros((), jnp.int32)
+    for i, t in enumerate([3.0, 1.0, 2.0, 1.0]):
+        keys, vals, n, dropped = jq.event_push(keys, vals, n,
+                                               jnp.float32(t), (i,), True)
+        assert not bool(dropped)
+    # full: an active push is dropped and REPORTED, an inactive one is not
+    keys2, vals2, n2, dropped = jq.event_push(keys, vals, n,
+                                              jnp.float32(0.5), (9,), True)
+    assert bool(dropped) and int(n2) == 4
+    assert np.array_equal(np.asarray(keys2), np.asarray(keys))
+    _, _, _, dropped = jq.event_push(keys, vals, n, jnp.float32(0.5), (9,),
+                                     False)
+    assert not bool(dropped)
+    # sorted with the equal-key pair in push order (seq 1 before seq 3)
+    assert list(np.asarray(keys)) == [1.0, 1.0, 2.0, 3.0]
+    assert list(np.asarray(vals[0])) == [1, 3, 2, 0]
+    # inactive pop is a no-op
+    k3, v3, n3 = jq.event_pop(keys, vals, n, False)
+    assert np.array_equal(np.asarray(k3), np.asarray(keys)) and int(n3) == 4
+
+
 def test_capacity_limit():
     led = jq.empty_ledger(2)
     for _ in range(2):
