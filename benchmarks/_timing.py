@@ -1,0 +1,54 @@
+"""Shared cold/warm timing for the benchmark suite.
+
+Every device-side benchmark in this repo reports the same split: the
+**cold** row is the first call of a jitted executable (compile + run —
+recorded, never the throughput number) and the **warm** row is a second
+call of the same compiled executable (the steady-state figure).  The
+``perf_counter`` + ``block_until_ready`` boilerplate lived copy-pasted
+in each bench; this module is the one implementation.
+
+``jax.block_until_ready`` is pytree-aware, so ``timed`` blocks on every
+leaf the benched function returns — a bench cannot accidentally time
+only the first output of an async dispatch.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+
+
+class ColdWarm(NamedTuple):
+    """One cold (compile + run) and one warm (steady-state) measurement;
+    ``result`` is the warm call's output, fully materialized."""
+    cold_s: float
+    warm_s: float
+    result: Any
+
+
+def timed(fn: Callable[[], Any]) -> Tuple[float, Any]:
+    """Wall-clock one call of ``fn``, blocking on everything it returns.
+
+    Returns ``(seconds, result)``.  Host-side functions pass through
+    ``block_until_ready`` untouched, so the same helper times both
+    engines.
+    """
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn())
+    return time.perf_counter() - t0, out
+
+
+def cold_warm(cold_fn: Callable[[], Any],
+              warm_fn: Optional[Callable[[], Any]] = None) -> ColdWarm:
+    """The standard two-call protocol.
+
+    ``cold_fn`` runs first (its timing folds in JIT compilation);
+    ``warm_fn`` (default: ``cold_fn`` again — same args, same compiled
+    executable) runs second and its result is returned.  Benches that
+    warm up on one input and measure on another — e.g. fleetsim's
+    seed-0 warm-up, seed-1 measurement — pass both.
+    """
+    cold_s, _ = timed(cold_fn)
+    warm_s, result = timed(warm_fn if warm_fn is not None else cold_fn)
+    return ColdWarm(cold_s=cold_s, warm_s=warm_s, result=result)

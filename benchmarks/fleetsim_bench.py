@@ -25,11 +25,15 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+try:                                     # `python -m benchmarks.run`
+    from benchmarks._timing import cold_warm, timed
+except ImportError:                      # `python benchmarks/fleetsim_bench.py`
+    from _timing import cold_warm, timed
 
 from repro.core.block_queue import FastPreferentialQueue
 from repro.core.scenarios import SCENARIOS
@@ -56,9 +60,7 @@ def bench_python(wl: UniformWorkload, topology: Topology, policy: str,
     requests = wl.generate(seed)
     orch = Orchestrator(topology, FastPreferentialQueue,
                         Router(topology, policy, seed=seed))
-    t0 = time.perf_counter()
-    res = orch.run(requests)
-    dt = time.perf_counter() - t0
+    dt, res = timed(lambda: orch.run(requests))
     return len(requests) / dt, dict(met_rate=res.met_rate,
                                     forwards=res.forwards)
 
@@ -86,16 +88,18 @@ def bench_fleetsim(wl: UniformWorkload, topology: Topology, policy: str,
     max_events = min(3 * R, R + 4 * forwards_hint + 256)
     kw = dict(policy=policy, capacity=capacity, depth=depth,
               use_pallas=use_pallas, max_events=max_events)
-    simulate(reqs, ta, SimParams.make(0), **kw).met_deadline.block_until_ready()
-    t0 = time.perf_counter()
-    m = simulate(reqs, ta, SimParams.make(1), **kw)
-    m.met_deadline.block_until_ready()
-    dt = time.perf_counter() - t0
+    # cold call on seed 0 (compile + run), warm measurement on seed 1 —
+    # same compiled executable, fresh forwarding stream
+    cw = cold_warm(lambda: simulate(reqs, ta, SimParams.make(0), **kw),
+                   lambda: simulate(reqs, ta, SimParams.make(1), **kw))
+    m = cw.result
     assert int(m.overflow) == 0 and int(m.window_saturation) == 0, \
         f"capacity {capacity}/depth {depth} saturated"
     assert int(m.event_overflow) == 0, \
         f"event plane saturated (max_events {max_events})"
-    return R / dt, dict(met_rate=float(m.met_rate), forwards=int(m.forwards))
+    return R / cw.warm_s, dict(met_rate=float(m.met_rate),
+                               forwards=int(m.forwards),
+                               cold_rps=round(R / cw.cold_s))
 
 
 def bench_sweep(wl: UniformWorkload, topology: Topology, n_seeds: int,
@@ -117,11 +121,10 @@ def bench_sweep(wl: UniformWorkload, topology: Topology, n_seeds: int,
         return SimParams(jnp.arange(lo, lo + n_seeds, dtype=jnp.int32),
                          jnp.full((n_seeds,), 1.0, jnp.float32))
 
-    sweep(reqs, ta, params(0), tgt).met_deadline.block_until_ready()
-    t0 = time.perf_counter()
-    m = sweep(reqs, ta, params(n_seeds), tgt)
-    m.met_deadline.block_until_ready()
-    dt = time.perf_counter() - t0
+    # cold on seeds [0, n), warm on fresh seeds [n, 2n) — same executable
+    cw = cold_warm(lambda: sweep(reqs, ta, params(0), tgt),
+                   lambda: sweep(reqs, ta, params(n_seeds), tgt))
+    m, dt = cw.result, cw.warm_s
     # the sweep keeps the exact worst-case event bound (per-seed forward
     # counts differ; undersizing would surface here, never silently)
     assert int(jnp.max(m.event_overflow)) == 0
@@ -167,6 +170,7 @@ def run(smoke: bool = False, full: bool = False,
             record.append(dict(nodes=K, policy=policy,
                                python_rps=py_rps and round(py_rps),
                                fleetsim_rps=round(fs_rps),
+                               fleetsim_cold_rps=fs_info["cold_rps"],
                                ratio=py_rps and round(ratio, 3),
                                met_rate=round(fs_info["met_rate"], 4),
                                forwards=fs_info["forwards"]))

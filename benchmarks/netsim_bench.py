@@ -33,7 +33,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 from typing import List, Optional, Tuple
 
 import jax
@@ -47,8 +46,10 @@ from repro.fleetsim.validate import run_validation
 from repro.netsim import LinkModel
 from repro.orchestration import Orchestrator, Router, Topology
 try:                                     # `python -m benchmarks.run`
+    from benchmarks._timing import cold_warm, timed
     from benchmarks.fleetsim_bench import make_fleet_workload
 except ImportError:                      # `python benchmarks/netsim_bench.py`
+    from _timing import cold_warm, timed
     from fleetsim_bench import make_fleet_workload
 
 JSON_DEFAULT = os.path.join(os.path.dirname(os.path.dirname(
@@ -82,13 +83,8 @@ def bench_grid(wl, topology: Topology, lams, inv_bws, slas,
     # inner axis: sla (SimParams), outer axis: the network itself
     cube = jax.vmap(jax.vmap(run, in_axes=(None, None, 0, None, None)),
                     in_axes=(None, None, None, None, 0))
-    t0 = time.perf_counter()
-    cube(reqs, ta, params, tgt, stacked).met_deadline.block_until_ready()
-    cold_dt = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    m = cube(reqs, ta, params, tgt, stacked)
-    m.met_deadline.block_until_ready()
-    dt = time.perf_counter() - t0
+    cw = cold_warm(lambda: cube(reqs, ta, params, tgt, stacked))
+    cold_dt, dt, m = cw.cold_s, cw.warm_s, cw.result
     n_cells = len(nets) * len(slas)
     met = np.asarray(m.met_deadline)            # (nets, slas)
     info = dict(
@@ -119,9 +115,7 @@ def bench_host_vs_fleet(wl, topology: Topology, link: LinkModel,
     orch = Orchestrator(topology, FastPreferentialQueue,
                         Router(topology, "least_loaded", seed=seed),
                         network=link)
-    t0 = time.perf_counter()
-    host = orch.run(requests)
-    host_dt = time.perf_counter() - t0
+    host_dt, host = timed(lambda: orch.run(requests))
 
     ta = topology_arrays(topology)
     reqs, _ = wl.to_arrays(seed, payload_fn=link.payload_of)
@@ -133,15 +127,10 @@ def bench_host_vs_fleet(wl, topology: Topology, link: LinkModel,
     max_events = min(R * 3, R + 2 * host.forwards + 64)
     kw = dict(policy="least_loaded", capacity=capacity, depth=depth,
               net=net, max_events=max_events)
-    t0 = time.perf_counter()
-    simulate(reqs, ta, SimParams.make(seed), **kw).met_deadline.block_until_ready()
-    cold_dt = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    # same seed as the host run: the comparison must replay the same
-    # workload cell, and the second call reuses the compiled executable
-    m = simulate(reqs, ta, SimParams.make(seed), **kw)
-    m.met_deadline.block_until_ready()
-    warm_dt = time.perf_counter() - t0
+    # same seed both calls: the comparison must replay the same workload
+    # cell, and the second call reuses the compiled executable
+    cw = cold_warm(lambda: simulate(reqs, ta, SimParams.make(seed), **kw))
+    cold_dt, warm_dt, m = cw.cold_s, cw.warm_s, cw.result
     assert int(m.overflow) == 0 and int(m.event_overflow) == 0
 
     # exact-fidelity regression guard: trace replay of the same cell

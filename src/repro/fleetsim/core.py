@@ -72,6 +72,9 @@ from repro.fleetsim.arrays import (RequestArrays, TopologyArrays,
                                    event_bound)
 from repro.kernels import ref as kref
 from repro.netsim.link import NetParams
+from repro.telemetry.timeline import (TelemetryConfig, TelemetryFrame,
+                                      bucket_of, bucket_width,
+                                      interval_histogram, telemetry_init)
 
 POLICIES = ("random", "power_of_two", "least_loaded", "round_robin",
             "batched_feasible", "trace")
@@ -129,6 +132,13 @@ class EventState(NamedTuple):
     completion: jnp.ndarray            # (R,) pop-time / idle-start scatter
     reqinfo: jnp.ndarray               # (R,) i32 packed terminal record
     transfer: jnp.ndarray              # (R,) wire time paid on referrals
+    # the carried half of the telemetry plane (DESIGN.md §8).  None when
+    # telemetry is disabled: a None leaf is an empty pytree, so the scan
+    # carry, the jaxpr and the compiled step are bit-identical to a
+    # build without these fields — the disabled path costs nothing
+    # (guarded in tests/test_telemetry.py)
+    tel_counts: Optional[jnp.ndarray] = None   # (K, NB, N_KINDS) i32
+    tel_occ: Optional[jnp.ndarray] = None      # (NB,) i32 ev_n high water
 
 
 class FleetMetrics(NamedTuple):
@@ -152,6 +162,8 @@ class FleetMetrics(NamedTuple):
     transfer_used: jnp.ndarray       # (R,) per-request wire time
     event_overflow: jnp.ndarray      # events dropped (full buffer) or left
     #                                  unprocessed at max_events; keep 0
+    telemetry: Optional[TelemetryFrame] = None   # the time-binned cube;
+    #                                  None unless simulate(telemetry=...)
 
     @property
     def met_rate(self):
@@ -260,7 +272,8 @@ def _estep(state: EventState, _, *, topo: TopologyArrays, key, policy: str,
            max_forwards: int, discard_on_exhaust: bool, capacity: int,
            depth: int, use_pallas: bool, R: int, use_network: bool,
            net: Optional[NetParams], fresh_cols, rear_cols, targets,
-           zero_net, hop_bits: int) -> Tuple[EventState, None]:
+           zero_net, hop_bits: int, tel_buckets: Optional[int] = None,
+           tel_width=None) -> Tuple[EventState, None]:
     K = topo.speeds.shape[0]
     W = depth
     dt = state.busy.dtype
@@ -268,40 +281,41 @@ def _estep(state: EventState, _, *, topo: TopologyArrays, key, policy: str,
     # -- the two candidate events: next fresh arrival vs re-arrival head.
     # Per-request constants ride pre-packed row matrices so each candidate
     # costs ONE gather (the scan is fusion-break bound on CPU)
-    avail_a = state.cursor < R
-    ci = jnp.minimum(state.cursor, R - 1)
-    rid_b = state.ev_rid[0]
-    meta_b = state.ev_meta[0]
-    node_b = meta_b >> hop_bits
-    hops_b = meta_b & ((1 << hop_bits) - 1)
-    fa = fresh_cols[ci]                      # (arrival, origin, d, p, pay)
-    fb = rear_cols[rid_b]                    # (d, p, pay)
-    origin_a = fa[1].astype(jnp.int32)
-    cand_a = (fa[0], origin_a, fa[2], fa[3], fa[4], avail_a)
-    cand_b = (state.ev_time[0], node_b, fb[0], fb[1], fb[2],
-              state.ev_n > 0)
+    with jax.named_scope("fleetsim.event_pop"):
+        avail_a = state.cursor < R
+        ci = jnp.minimum(state.cursor, R - 1)
+        rid_b = state.ev_rid[0]
+        meta_b = state.ev_meta[0]
+        node_b = meta_b >> hop_bits
+        hops_b = meta_b & ((1 << hop_bits) - 1)
+        fa = fresh_cols[ci]                  # (arrival, origin, d, p, pay)
+        fb = rear_cols[rid_b]                # (d, p, pay)
+        origin_a = fa[1].astype(jnp.int32)
+        cand_a = (fa[0], origin_a, fa[2], fa[3], fa[4], avail_a)
+        cand_b = (state.ev_time[0], node_b, fb[0], fb[1], fb[2],
+                  state.ev_n > 0)
 
-    # plain-jnp merge: fresh wins timestamp ties (the host heap numbers
-    # every fresh arrival before the run — lower seq than any mid-run
-    # push), the buffer orders re-arrivals by stable (time, seq) insert
-    take_fresh = avail_a & ((cand_a[0] <= cand_b[0]) | ~cand_b[5])
-    t = jnp.where(take_fresh, cand_a[0], cand_b[0])
-    cur = jnp.where(take_fresh, cand_a[1], cand_b[1])
+        # plain-jnp merge: fresh wins timestamp ties (the host heap numbers
+        # every fresh arrival before the run — lower seq than any mid-run
+        # push), the buffer orders re-arrivals by stable (time, seq) insert
+        take_fresh = avail_a & ((cand_a[0] <= cand_b[0]) | ~cand_b[5])
+        t = jnp.where(take_fresh, cand_a[0], cand_b[0])
+        cur = jnp.where(take_fresh, cand_a[1], cand_b[1])
 
-    live = avail_a | cand_b[5]
-    rid = jnp.where(take_fresh, ci, rid_b)
-    hops = jnp.where(take_fresh, 0, hops_b)
-    d = jnp.where(take_fresh, cand_a[2], cand_b[2])
-    p = jnp.where(take_fresh, cand_a[3], cand_b[3])
-    pay = jnp.where(take_fresh, cand_a[4], cand_b[4])
+        live = avail_a | cand_b[5]
+        rid = jnp.where(take_fresh, ci, rid_b)
+        hops = jnp.where(take_fresh, 0, hops_b)
+        d = jnp.where(take_fresh, cand_a[2], cand_b[2])
+        p = jnp.where(take_fresh, cand_a[3], cand_b[3])
+        pay = jnp.where(take_fresh, cand_a[4], cand_b[4])
 
-    # -- consume the event: bump the cursor or pop the buffer head --------
-    ev_time, (ev_rid, ev_meta), ev_n = jq.event_pop(
-        state.ev_time, (state.ev_rid, state.ev_meta),
-        state.ev_n, live & ~take_fresh)
-    state = state._replace(cursor=state.cursor + take_fresh.astype(jnp.int32),
-                           ev_time=ev_time, ev_rid=ev_rid, ev_meta=ev_meta,
-                           ev_n=ev_n)
+        # -- consume the event: bump the cursor or pop the buffer head ----
+        ev_time, (ev_rid, ev_meta), ev_n = jq.event_pop(
+            state.ev_time, (state.ev_rid, state.ev_meta),
+            state.ev_n, live & ~take_fresh)
+        state = state._replace(
+            cursor=state.cursor + take_fresh.astype(jnp.int32),
+            ev_time=ev_time, ev_rid=ev_rid, ev_meta=ev_meta, ev_n=ev_n)
 
     # -- retire completions due strictly before the event (on a dead step
     # t is +BIG, which simply starts the final drain early — harmless).
@@ -309,12 +323,14 @@ def _estep(state: EventState, _, *, topo: TopologyArrays, key, policy: str,
     # POST-retire ledgers: the host pops every completion due before `t`
     # ahead of the admission test, and a stale not-yet-retired block would
     # inflate the pending-work sum and flip verdicts.
-    state = _retire(state, t, R)
+    with jax.named_scope("fleetsim.retire"):
+        state = _retire(state, t, R)
     ps = p / topo.speeds                                    # (K,) scaled
     cpu_free_c = jnp.maximum(t, state.busy[cur])
 
     feas_all = j_all = cap_all = None
     if policy == "batched_feasible":
+        # (scope set inside the kernels.ops wrappers: "kernels.event_select")
         # the event_select kernel's slot in the step: the two-way merge and
         # the per-hop link_cost candidate mask fused into one pass over the
         # whole fleet's live windows.  The kernel re-derives the merge from
@@ -341,24 +357,28 @@ def _estep(state: EventState, _, *, topo: TopologyArrays, key, policy: str,
         take_fresh, t, cur, feas_all, _, j_all, cap_all, _ = sel
 
     # -- admission test at the event's node -------------------------------
-    w0c = jnp.clip(state.head[cur], 0, capacity - W)
-    hrel_c = state.head[cur] - w0c
+    with jax.named_scope("fleetsim.feasibility"):
+        w0c = jnp.clip(state.head[cur], 0, capacity - W)
+        hrel_c = state.head[cur] - w0c
 
-    def win_row(buf):
-        return jax.lax.dynamic_slice(buf, (cur, w0c), (1, W))[0]
+        def win_row(buf):
+            return jax.lax.dynamic_slice(buf, (cur, w0c), (1, W))[0]
 
-    starts_w, ends_w, sizes_w = (win_row(state.starts), win_row(state.ends),
-                                 win_row(state.sizes))
-    if policy == "batched_feasible":
-        # the fused pass already scored every node — including `cur` itself
-        # at its true arrival (zero net diagonal); gather its verdict
-        ok = feas_all[cur]
-        j, cap = j_all[cur], cap_all[cur]
-    else:
-        okv, jv, capv, _ = kref.fleet_search_ref(
-            starts_w[None], ends_w[None], sizes_w[None], state.nq[cur][None],
-            ps[cur][None], d, cpu_free_c[None], hrel_c[None])
-        ok, j, cap = okv[0], jv[0], capv[0]
+        starts_w, ends_w, sizes_w = (win_row(state.starts),
+                                     win_row(state.ends),
+                                     win_row(state.sizes))
+        if policy == "batched_feasible":
+            # the fused pass already scored every node — including `cur`
+            # itself at its true arrival (zero net diagonal); gather its
+            # verdict
+            ok = feas_all[cur]
+            j, cap = j_all[cur], cap_all[cur]
+        else:
+            okv, jv, capv, _ = kref.fleet_search_ref(
+                starts_w[None], ends_w[None], sizes_w[None],
+                state.nq[cur][None], ps[cur][None], d, cpu_free_c[None],
+                hrel_c[None])
+            ok, j, cap = okv[0], jv[0], capv[0]
 
     # -- decide: admit / forward / force / discard ------------------------
     exhausted = (hops >= max_forwards) | (topo.degree[cur] == 0)
@@ -369,41 +389,46 @@ def _estep(state: EventState, _, *, topo: TopologyArrays, key, policy: str,
 
     # -- forward: pick the target NOW (true event time) and defer the
     # re-arrival to t + transfer_delay via a stable sorted insert ---------
-    kreq = jax.random.fold_in(key, rid) \
-        if policy in ("random", "power_of_two") else None
-    tgt_row = targets[rid] if policy == "trace" else None
-    nxt, rr_adv = _route_next(policy, topo, state.load, cur, kreq, hops,
-                              tgt_row, feas_all, state.rr)
-    if use_network:
-        # the hop's wire cost — latency plus frame serialization
-        # (DESIGN.md §6) — as two scalar gathers
-        delay = net.latency[cur, nxt] + pay * net.inv_bw[cur, nxt]
-    else:
-        delay = jnp.zeros((), dt)
-    ev_time, (ev_rid, ev_meta), ev_n, dropped = jq.event_push(
-        state.ev_time, (state.ev_rid, state.ev_meta),
-        state.ev_n, t + delay, (rid, (nxt << hop_bits) | (hops + 1)), fwd)
-    state = state._replace(
-        ev_time=ev_time, ev_rid=ev_rid, ev_meta=ev_meta,
-        ev_n=ev_n, ev_dropped=state.ev_dropped + dropped.astype(jnp.int32))
-    if policy == "round_robin":
-        state = state._replace(rr=jnp.where(fwd, rr_adv, state.rr))
+    with jax.named_scope("fleetsim.route"):
+        kreq = jax.random.fold_in(key, rid) \
+            if policy in ("random", "power_of_two") else None
+        tgt_row = targets[rid] if policy == "trace" else None
+        nxt, rr_adv = _route_next(policy, topo, state.load, cur, kreq, hops,
+                                  tgt_row, feas_all, state.rr)
+        if use_network:
+            # the hop's wire cost — latency plus frame serialization
+            # (DESIGN.md §6) — as two scalar gathers
+            delay = net.latency[cur, nxt] + pay * net.inv_bw[cur, nxt]
+        else:
+            delay = jnp.zeros((), dt)
+        ev_time, (ev_rid, ev_meta), ev_n, dropped = jq.event_push(
+            state.ev_time, (state.ev_rid, state.ev_meta),
+            state.ev_n, t + delay, (rid, (nxt << hop_bits) | (hops + 1)),
+            fwd)
+        state = state._replace(
+            ev_time=ev_time, ev_rid=ev_rid, ev_meta=ev_meta,
+            ev_n=ev_n,
+            ev_dropped=state.ev_dropped + dropped.astype(jnp.int32))
+        if policy == "round_robin":
+            state = state._replace(rr=jnp.where(fwd, rr_adv, state.rr))
 
     # -- apply at cur, within its window (jax_queue.insert_at — the shared
     # closed-form cascade — with the pre-computed search results) ---------
-    room = hrel_c + state.nq[cur] < W
-    forced_ok = forced_req & room
-    ovf_evt = forced_req & ~room
-    # a consulted node whose live window is exhausted can diverge from the
-    # host's unbounded queue even on the feasible path (its admission test
-    # reports "no room" where the host might admit) — surface it
-    sat_evt = live & (hrel_c + state.nq[cur] >= W)
-    idle = state.busy[cur] < t
-    sr_w = win_row(state.slot_rid)
-    n_starts, n_ends, n_sizes, admitted, (n_sr,) = jq.insert_at(
-        starts_w, ends_w, sizes_w, hrel_c, state.nq[cur], feas_evt,
-        forced_ok, j, cap, ps[cur], cpu_free_c, meta=(sr_w,),
-        meta_vals=(rid,))
+    with jax.named_scope("fleetsim.admission"):
+        room = hrel_c + state.nq[cur] < W
+        forced_ok = forced_req & room
+        ovf_evt = forced_req & ~room
+        # a consulted node whose live window is exhausted can diverge from
+        # the host's unbounded queue even on the feasible path (its
+        # admission test reports "no room" where the host might admit) —
+        # surface it
+        sat_evt = live & (hrel_c + state.nq[cur] >= W)
+        idle = state.busy[cur] < t
+        sr_w = win_row(state.slot_rid)
+        n_starts, n_ends, n_sizes, admitted, (n_sr,) = jq.insert_at(
+            starts_w, ends_w, sizes_w, hrel_c, state.nq[cur], feas_evt,
+            forced_ok, j, cap, ps[cur], cpu_free_c, meta=(sr_w,),
+            meta_vals=(rid,))
 
     # idle CPU: the host engine pushes then immediately pops — net effect is
     # the request starts at its (wire-delayed) arrival and never enters
@@ -417,29 +442,51 @@ def _estep(state: EventState, _, *, topo: TopologyArrays, key, policy: str,
             buf, jnp.where(queue_it, new, old)[None, :], (cur, w0c))
 
     # the packed terminal record: one (R,) scatter instead of four
-    terminal = admitted | disc_evt | ovf_evt
-    info = (hops
-            + jnp.where(disc_evt, _INFO_DISC, 0)
-            + jnp.where(ovf_evt, _INFO_OVF, 0)
-            + jnp.where(admitted, (cur + 1) << _INFO_SERVED, 0))
-    rid_if = lambda flag: jnp.where(flag, rid, R)           # R => dropped
-    state = state._replace(
-        starts=put(state.starts, n_starts, starts_w),
-        ends=put(state.ends, n_ends, ends_w),
-        sizes=put(state.sizes, n_sizes, sizes_w),
-        slot_rid=put(state.slot_rid, n_sr, sr_w),
-        nq=state.nq.at[cur].add(queue_it.astype(jnp.int32)),
-        load=state.load.at[cur].add(jnp.where(queue_it, ps[cur], 0.0)),
-        busy=state.busy.at[cur].set(
-            jnp.where(start_now, c_now, state.busy[cur])),
-        sat_events=state.sat_events + sat_evt.astype(jnp.int32),
-        completion=state.completion.at[rid_if(start_now)].set(
-            c_now, mode="drop"),
-        reqinfo=state.reqinfo.at[rid_if(terminal)].set(info, mode="drop"),
-    )
-    if use_network:
+    with jax.named_scope("fleetsim.scatter"):
+        terminal = admitted | disc_evt | ovf_evt
+        info = (hops
+                + jnp.where(disc_evt, _INFO_DISC, 0)
+                + jnp.where(ovf_evt, _INFO_OVF, 0)
+                + jnp.where(admitted, (cur + 1) << _INFO_SERVED, 0))
+        rid_if = lambda flag: jnp.where(flag, rid, R)       # R => dropped
         state = state._replace(
-            transfer=state.transfer.at[rid_if(fwd)].add(delay, mode="drop"))
+            starts=put(state.starts, n_starts, starts_w),
+            ends=put(state.ends, n_ends, ends_w),
+            sizes=put(state.sizes, n_sizes, sizes_w),
+            slot_rid=put(state.slot_rid, n_sr, sr_w),
+            nq=state.nq.at[cur].add(queue_it.astype(jnp.int32)),
+            load=state.load.at[cur].add(jnp.where(queue_it, ps[cur], 0.0)),
+            busy=state.busy.at[cur].set(
+                jnp.where(start_now, c_now, state.busy[cur])),
+            sat_events=state.sat_events + sat_evt.astype(jnp.int32),
+            completion=state.completion.at[rid_if(start_now)].set(
+                c_now, mode="drop"),
+            reqinfo=state.reqinfo.at[rid_if(terminal)].set(info,
+                                                           mode="drop"),
+        )
+        if use_network:
+            state = state._replace(
+                transfer=state.transfer.at[rid_if(fwd)].add(delay,
+                                                            mode="drop"))
+
+    if tel_buckets is not None:
+        # the carried half of the telemetry cube (DESIGN.md §8): one
+        # 5-vector scatter-add of the event kinds at (node, bucket) and
+        # one high-water max of the re-arrival buffer's live count.  On a
+        # dead step every flag is False and ev_n is 0, so both updates
+        # are no-ops (the +BIG event time clips into the last bucket on
+        # the float side — no int overflow)
+        with jax.named_scope("fleetsim.telemetry"):
+            b = bucket_of(t, tel_width, tel_buckets)
+            kinds = jnp.stack([
+                (live & take_fresh).astype(jnp.int32),
+                (live & ~take_fresh).astype(jnp.int32),
+                fwd.astype(jnp.int32),
+                (disc_evt | ovf_evt).astype(jnp.int32),
+                admitted.astype(jnp.int32)])
+            state = state._replace(
+                tel_counts=state.tel_counts.at[cur, b].add(kinds),
+                tel_occ=state.tel_occ.at[b].max(state.ev_n))
     return state, None
 
 
@@ -449,14 +496,17 @@ def _estep(state: EventState, _, *, topo: TopologyArrays, key, policy: str,
 @functools.partial(
     jax.jit, static_argnames=("policy", "max_forwards", "discard_on_exhaust",
                               "capacity", "depth", "use_pallas",
-                              "use_network", "max_events", "event_buf"))
+                              "use_network", "max_events", "event_buf",
+                              "tel_buckets", "tel_horizon"))
 def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
               targets: jnp.ndarray, net: Optional[NetParams] = None, *,
               policy: str, max_forwards: int, discard_on_exhaust: bool,
               capacity: int, depth: int, use_pallas: bool,
               use_network: bool = False,
               max_events: Optional[int] = None,
-              event_buf: Optional[int] = None) -> FleetMetrics:
+              event_buf: Optional[int] = None,
+              tel_buckets: Optional[int] = None,
+              tel_horizon: Optional[float] = None) -> FleetMetrics:
     R = reqs.arrival.shape[0]
     K = topo.speeds.shape[0]
     N = capacity
@@ -488,6 +538,18 @@ def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
         reqinfo=jnp.zeros((R,), jnp.int32),
         transfer=jnp.zeros((R,), dt),
     )
+    tel_width = None
+    if tel_buckets is not None:
+        if tel_horizon is None:
+            raise ValueError("telemetry needs a horizon (TelemetryConfig "
+                             "carries both; got tel_buckets without "
+                             "tel_horizon)")
+        # the shared bucket contract (DESIGN.md §8): width computed ONCE
+        # in f32 on the host so both engines bin with bit-identical
+        # arithmetic
+        tel_width = jnp.asarray(bucket_width(tel_horizon, tel_buckets), dt)
+        tel_counts0, tel_occ0 = telemetry_init(K, tel_buckets)
+        state = state._replace(tel_counts=tel_counts0, tel_occ=tel_occ0)
     key = jax.random.PRNGKey(params.seed)
     d_abs = reqs.arrival + reqs.rel_deadline * params.sla_scale
     payload = (reqs.payload if reqs.payload is not None
@@ -503,7 +565,8 @@ def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
         discard_on_exhaust=discard_on_exhaust, capacity=capacity,
         depth=depth, use_pallas=use_pallas, R=R, use_network=use_network,
         net=net, fresh_cols=fresh_cols, rear_cols=rear_cols,
-        targets=targets, zero_net=jnp.zeros((K, K), dt), hop_bits=hop_bits)
+        targets=targets, zero_net=jnp.zeros((K, K), dt), hop_bits=hop_bits,
+        tel_buckets=tel_buckets, tel_width=tel_width)
     state, _ = jax.lax.scan(step, state, None, length=E)
     unprocessed = (R - state.cursor) + state.ev_n
     state = _retire(state, jnp.asarray(jnp.inf, dt), R)     # drain
@@ -525,6 +588,29 @@ def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
     resp = jnp.sum(jnp.where(has_c, completion - reqs.arrival, 0.0))
     last_arrival = jnp.max(reqs.arrival, initial=0.0)
     end_time = jnp.maximum(jnp.max(completion, initial=0.0), last_arrival)
+    telemetry = None
+    if tel_buckets is not None:
+        # the derived half: queue depth and CPU busy time need no scan
+        # carry at all — every served request's ledger interval
+        # [admit, start) and service interval [start, completion) is
+        # reconstructible from the terminal arrays, so the integrals are
+        # two post-scan scatter-adds over the request axis
+        with jax.named_scope("fleetsim.telemetry"):
+            served = served_by >= 0
+            ps_served = reqs.proc / topo.speeds[jnp.clip(served_by, 0,
+                                                         K - 1)]
+            admit_t = reqs.arrival + state.transfer
+            start_t = completion - ps_served
+            depth = interval_histogram(admit_t, start_t, served_by, served,
+                                       K, tel_width, tel_buckets)
+            busy = interval_histogram(start_t, completion, served_by,
+                                      served, K, tel_width, tel_buckets)
+            telemetry = TelemetryFrame(
+                counts=state.tel_counts,
+                queue_depth=depth / tel_width,
+                busy_time=busy,
+                occupancy_hwm=state.tel_occ,
+                bucket_width=tel_width)
     return FleetMetrics(
         total=jnp.int32(R),
         processed=n_proc.astype(jnp.int32),
@@ -542,6 +628,7 @@ def _simulate(reqs: RequestArrays, topo: TopologyArrays, params: SimParams,
         transfer_time=jnp.sum(state.transfer),
         transfer_used=state.transfer,
         event_overflow=(state.ev_dropped + unprocessed).astype(jnp.int32),
+        telemetry=telemetry,
     )
 
 
@@ -553,7 +640,8 @@ def simulate(reqs: RequestArrays, topo: TopologyArrays,
              use_pallas: bool = False,
              net: Optional[NetParams] = None,
              max_events: Optional[int] = None,
-             event_buf: Optional[int] = None) -> FleetMetrics:
+             event_buf: Optional[int] = None,
+             telemetry: Optional[TelemetryConfig] = None) -> FleetMetrics:
     """Run the full fleet simulation as one device call.
 
     ``reqs``/``topo`` come from :mod:`repro.fleetsim.arrays` (or
@@ -588,6 +676,18 @@ def simulate(reqs: RequestArrays, topo: TopologyArrays,
     ``net=None`` prices every hop 0.0 through the same machinery, and
     ``NetParams.zero`` reproduces its outcomes bit-for-bit
     (equivalence-guarded).
+
+    ``telemetry`` (a :class:`repro.telemetry.TelemetryConfig`) turns on
+    the device-side time series: ``metrics.telemetry`` becomes a
+    :class:`~repro.telemetry.TelemetryFrame` binning the run into
+    ``n_buckets`` buckets over ``[0, horizon)`` — per-node event-kind
+    counters, time-averaged queue depth, CPU busy time, and the
+    re-arrival buffer's occupancy high-water mark (DESIGN.md §8).  The
+    frame costs two extra scan carries; with ``telemetry=None`` (the
+    default) those carries are ``None`` pytree leaves that compile out
+    entirely — the hot path is bit-identical to a build without
+    telemetry.  Both config fields are static: each (n_buckets, horizon)
+    pair compiles once.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown fleetsim policy {policy!r}; "
@@ -610,19 +710,28 @@ def simulate(reqs: RequestArrays, topo: TopologyArrays,
                 "Workload.to_arrays, or pass payload=zeros explicitly for "
                 "a latency-only network)")
         net = NetParams(*(jnp.asarray(a, jnp.float32) for a in net))
+    tel_buckets = tel_horizon = None
+    if telemetry is not None:
+        tel_buckets = int(telemetry.n_buckets)
+        tel_horizon = float(telemetry.horizon)
+        if tel_buckets < 1 or not tel_horizon > 0:
+            raise ValueError(f"telemetry needs n_buckets >= 1 and a "
+                             f"positive horizon, got {telemetry}")
     return _simulate(reqs, topo, params, jnp.asarray(targets, jnp.int32),
                      net, policy=policy, max_forwards=max_forwards,
                      discard_on_exhaust=discard_on_exhaust,
                      capacity=capacity, depth=depth, use_pallas=use_pallas,
                      use_network=use_network, max_events=max_events,
-                     event_buf=event_buf)
+                     event_buf=event_buf, tel_buckets=tel_buckets,
+                     tel_horizon=tel_horizon)
 
 
 def simulate_fn(*, policy: str = "random", max_forwards: int = 2,
                 discard_on_exhaust: bool = False, capacity: int = 256,
                 depth: Optional[int] = None, use_pallas: bool = False,
                 network: bool = False, max_events: Optional[int] = None,
-                event_buf: Optional[int] = None):
+                event_buf: Optional[int] = None,
+                telemetry: Optional[TelemetryConfig] = None):
     """The jitted simulator with statics bound — the thing to ``jax.vmap``.
 
     Signature of the returned function:
@@ -648,10 +757,21 @@ def simulate_fn(*, policy: str = "random", max_forwards: int = 2,
     cover its heaviest cell — undersizing surfaces in
     ``metrics.event_overflow``, never silently, so check it across the
     whole sweep.
+
+    ``telemetry=TelemetryConfig(nb, horizon)`` threads the device time
+    series through every mapped cell: under vmap the returned
+    ``metrics.telemetry`` is a *stacked* frame — counts of shape
+    ``(sweep, K, nb, N_KINDS)`` and so on — one telemetry cube per sweep
+    point from a single device call (see :func:`simulate`).
     """
+    tel_buckets = tel_horizon = None
+    if telemetry is not None:
+        tel_buckets = int(telemetry.n_buckets)
+        tel_horizon = float(telemetry.horizon)
     return functools.partial(
         _simulate, policy=policy, max_forwards=max_forwards,
         discard_on_exhaust=discard_on_exhaust, capacity=capacity,
         depth=capacity if depth is None else min(depth, capacity),
         use_pallas=use_pallas, use_network=network, max_events=max_events,
-        event_buf=event_buf)
+        event_buf=event_buf, tel_buckets=tel_buckets,
+        tel_horizon=tel_horizon)

@@ -39,6 +39,9 @@ from repro.fleetsim.arrays import pack_requests, topology_arrays
 from repro.netsim import LinkModel
 from repro.orchestration import (Hooks, Orchestrator, Router, Topology,
                                  Workload, get_workload)
+from repro.telemetry import (TelemetryAgreement, TelemetryConfig,
+                             TelemetrySummary, TraceRecorder,
+                             compare_summaries)
 
 # host policies fleetsim replays move-for-move without a trace
 DETERMINISTIC = ("round_robin", "batched_feasible")
@@ -60,35 +63,42 @@ class ValidationReport:
     transfer_max_err: float          # max |per-request wire time| difference
     met_diff_pp: float               # |met-rate difference| in percent points
     capacity: int
+    telemetry: Optional[TelemetryAgreement] = None   # --telemetry only
 
     @property
     def exact(self) -> bool:
         return (self.outcome_mismatches == 0 and self.node_mismatches == 0
-                and self.transfer_max_err <= TRANSFER_ATOL)
+                and self.transfer_max_err <= TRANSFER_ATOL
+                and (self.telemetry is None or self.telemetry.ok))
 
     def row(self) -> str:
         tag = "exact" if self.exact else \
             f"{self.outcome_mismatches}o/{self.node_mismatches}n mismatches"
+        tel = "" if self.telemetry is None else f"  tel: {self.telemetry.row()}"
         return (f"{self.scenario:18s} seed={self.seed} {self.policy:16s} "
                 f"met {self.host['met_deadline']:6.0f}/{self.fleet['met_deadline']:6.0f} "
                 f"fwd {self.host['forwards']:6.0f}/{self.fleet['forwards']:6.0f} "
                 f"disc {self.host['discarded']:5.0f}/{self.fleet['discarded']:5.0f} "
                 f"dmet {self.met_diff_pp:5.3f}pp "
-                f"dwire {self.transfer_max_err:7.1e}  [{tag}]")
+                f"dwire {self.transfer_max_err:7.1e}  [{tag}]{tel}")
 
 
 def _host_run(workload: Workload, topology: Topology, seed: int,
               policy: str, max_forwards: int, discard_on_exhaust: bool,
-              network: Optional[LinkModel] = None):
+              network: Optional[LinkModel] = None,
+              record_trace: bool = False):
     """Event-heap reference run.
 
-    Returns ``(requests, result, targets, peak, depth, transfer)`` —
-    ``targets[dense_idx, hop]`` records every forwarding choice in the
-    order the heap consumed it, ``transfer[dense_idx]`` the wire time the
-    request paid on referrals, ``peak`` the largest per-node admission
-    count (sizes the fleet slot buffer: head-pointer rows retire slots
-    without reusing them, so capacity tracks total admissions, not peak
-    depth), ``depth`` the deepest queue observed.
+    Returns ``(requests, result, targets, peak, depth, transfer,
+    recorder)`` — ``targets[dense_idx, hop]`` records every forwarding
+    choice in the order the heap consumed it, ``transfer[dense_idx]`` the
+    wire time the request paid on referrals, ``peak`` the largest
+    per-node admission count (sizes the fleet slot buffer: head-pointer
+    rows retire slots without reusing them, so capacity tracks total
+    admissions, not peak depth), ``depth`` the deepest queue observed.
+    With ``record_trace`` the run additionally streams through a
+    :class:`repro.telemetry.TraceRecorder` (chained ahead of the local
+    hooks) and returns it; otherwise ``recorder`` is None.
     """
     requests = workload.generate(seed)
     idx = {r.rid: j for j, r in enumerate(requests)}
@@ -109,16 +119,20 @@ def _host_run(workload: Workload, topology: Topology, seed: int,
         nonlocal depth
         depth = max(depth, len(node.queue))
 
+    hooks = Hooks(on_forward=on_forward, on_admit=on_admit)
+    recorder = None
+    if record_trace:
+        recorder = TraceRecorder(network=network, hooks=hooks)
+        hooks = recorder.hooks
     orch = Orchestrator(topology, FastPreferentialQueue,
                         Router(topology, policy, seed=seed),
                         max_forwards=max_forwards,
                         discard_on_exhaust=discard_on_exhaust,
                         network=network,
-                        hooks=Hooks(on_forward=on_forward,
-                                    on_admit=on_admit))
+                        hooks=hooks)
     result = orch.run(requests)
     peak = max(n.admitted for n in result.per_node)
-    return requests, result, targets, peak, depth, transfer
+    return requests, result, targets, peak, depth, transfer, recorder
 
 
 def _host_outcomes(requests, result):
@@ -137,7 +151,8 @@ def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
                    discard_on_exhaust: bool = False,
                    topology: Optional[Topology] = None,
                    capacity: Optional[int] = None,
-                   network: Optional[LinkModel] = None) -> ValidationReport:
+                   network: Optional[LinkModel] = None,
+                   telemetry: Optional[int] = None) -> ValidationReport:
     """One (scenario, seed, policy) cross-validation cell.
 
     ``network`` runs BOTH engines under the link model (the host pays
@@ -146,6 +161,15 @@ def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
     priced networks as well as the zero model — the event-time scan
     replays the heap's event interleaving exactly (DESIGN.md §7), so
     outcome, serving node and per-request wire time are all compared.
+
+    ``telemetry`` (a bucket count) extends the contract from outcomes to
+    dynamics (DESIGN.md §8): the host run streams through a
+    :class:`~repro.telemetry.TraceRecorder`, a second device run carries
+    the telemetry cube, and the two time-binned summaries must agree
+    bucket-for-bucket — counters and occupancy exactly, derived
+    integrals within f32-endpoint tolerance.  The telemetry-enabled run
+    is additionally checked bit-identical to the plain run on every
+    shared output (the disabled-path guarantee, from the other side).
     """
     workload = get_workload(scenario) if isinstance(scenario, str) \
         else scenario
@@ -155,9 +179,9 @@ def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
             else Topology.full_mesh(workload.n_nodes)
     if network is not None and network.n_nodes != topology.n_nodes:
         raise ValueError("network and topology disagree on node count")
-    requests, result, targets, peak, depth, host_tr = _host_run(
+    requests, result, targets, peak, depth, host_tr, recorder = _host_run(
         workload, topology, seed, policy, max_forwards, discard_on_exhaust,
-        network=network)
+        network=network, record_trace=telemetry is not None)
 
     if capacity is None:
         capacity = 1 << max(3, (peak + 2 - 1).bit_length())
@@ -183,6 +207,31 @@ def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
         f"event plane saturated (max_events {max_events}, " \
         f"host forwards {result.forwards})"
 
+    agreement = None
+    if telemetry is not None:
+        horizon = float(result.end_time)
+        m_tel = fcore.simulate(
+            reqs, topology_arrays(topology), fcore.SimParams.make(seed),
+            policy=fleet_policy, max_forwards=max_forwards,
+            discard_on_exhaust=discard_on_exhaust,
+            capacity=capacity, depth=window, targets=targets,
+            net=network.net_params() if network else None,
+            max_events=max_events,
+            telemetry=TelemetryConfig(telemetry, horizon))
+        # the disabled-path guarantee, measured from the enabled side:
+        # carrying the cube must not perturb a single output bit
+        for fld in ("outcome", "served_by", "completion", "forwards_used",
+                    "transfer_used", "met_deadline", "processed",
+                    "forwards", "discarded", "overflow",
+                    "window_saturation", "event_overflow"):
+            a = np.asarray(getattr(m, fld))
+            b = np.asarray(getattr(m_tel, fld))
+            assert np.array_equal(a, b), \
+                f"telemetry run perturbed {fld} (disabled-path guarantee)"
+        host_sum = recorder.summary(requests, topology, telemetry, horizon)
+        dev_sum = TelemetrySummary.from_frame(m_tel.telemetry)
+        agreement = compare_summaries(host_sum, dev_sum)
+
     host_out, host_served = _host_outcomes(requests, result)
     mismatches = int(np.sum(host_out != np.asarray(m.outcome)))
     node_mismatches = int(np.sum(host_served != np.asarray(m.served_by)))
@@ -203,7 +252,7 @@ def run_validation(scenario: str = "paper/scenario1", seed: int = 0,
         node_mismatches=node_mismatches, transfer_max_err=transfer_max_err,
         met_diff_pp=100.0 * abs(host["met_deadline"]
                                 - fleet["met_deadline"]) / max(1, total),
-        capacity=capacity)
+        capacity=capacity, telemetry=agreement)
 
 
 def main() -> List[ValidationReport]:
@@ -220,6 +269,13 @@ def main() -> List[ValidationReport]:
                          "contract is enforced either way — the event-time "
                          "scan replays the heap exactly under any pricing "
                          "(DESIGN.md §7)")
+    ap.add_argument("--telemetry", nargs="?", type=int, const=32,
+                    default=None, metavar="BUCKETS",
+                    help="also enforce the telemetry contract (DESIGN.md "
+                         "§8): host trace and device time-series must "
+                         "agree bucket-for-bucket, and the telemetry-"
+                         "enabled run must be bit-identical to the plain "
+                         "one.  Optional value = bucket count (default 32)")
     args = ap.parse_args()
     reports = []
     for sc in args.scenarios:
@@ -232,7 +288,7 @@ def main() -> List[ValidationReport]:
         for seed in range(args.seeds):
             rep = run_validation(sc, seed, policy=args.policy,
                                  discard_on_exhaust=args.discard,
-                                 network=network)
+                                 network=network, telemetry=args.telemetry)
             reports.append(rep)
             print(rep.row(), flush=True)
     worst = max(r.met_diff_pp for r in reports)
@@ -240,7 +296,8 @@ def main() -> List[ValidationReport]:
     violations = [r for r in reports
                   if r.met_diff_pp > 0.5
                   or r.outcome_mismatches > 0.005 * r.total
-                  or r.node_mismatches > 0.005 * r.total]
+                  or r.node_mismatches > 0.005 * r.total
+                  or (r.telemetry is not None and not r.telemetry.ok)]
     print(f"# {n_exact}/{len(reports)} cells exact; "
           f"worst met-rate delta {worst:.3f}pp "
           f"(contract: exact or <= 0.5pp f32-boundary flips, "

@@ -89,8 +89,10 @@ def fleet_feasibility(starts: jnp.ndarray, ends: jnp.ndarray,
     router's pending-work reduction; see kernels/fleet_feasibility.py.
     ``head`` marks retired slots (fleetsim head-pointer rows; default 0).
     """
-    return _ff.fleet_feasibility_fwd(starts, ends, sizes, n, ps, d, cpu_free,
-                                     head, interpret=_interpret())
+    with jax.named_scope("kernels.fleet_feasibility"):
+        return _ff.fleet_feasibility_fwd(starts, ends, sizes, n, ps, d,
+                                         cpu_free, head,
+                                         interpret=_interpret())
 
 
 @jax.jit
@@ -109,10 +111,12 @@ def event_select(t_a, node_a, d_a, p_a, pay_a, avail_a,
     arrive (K,), j (K,), cap (K,), load (K,))``; oracle:
     :func:`repro.kernels.ref.event_select_ref`.
     """
-    return _es.event_select_fwd(t_a, node_a, d_a, p_a, pay_a, avail_a,
-                                t_b, node_b, d_b, p_b, pay_b, avail_b,
-                                starts, ends, sizes, n, head, speeds, busy,
-                                latency, inv_bw, interpret=_interpret())
+    with jax.named_scope("kernels.event_select"):
+        return _es.event_select_fwd(t_a, node_a, d_a, p_a, pay_a, avail_a,
+                                    t_b, node_b, d_b, p_b, pay_b, avail_b,
+                                    starts, ends, sizes, n, head, speeds,
+                                    busy, latency, inv_bw,
+                                    interpret=_interpret())
 
 
 @jax.jit
@@ -129,6 +133,7 @@ def link_cost(starts: jnp.ndarray, ends: jnp.ndarray, sizes: jnp.ndarray,
     ``((K,) feasible, (K,) arrival, (K,) load)``; oracle:
     :func:`repro.kernels.ref.link_cost_ref`.
     """
-    return _lc.link_cost_fwd(starts, ends, sizes, n, ps, d, busy, head,
-                             t_src, lat_row, inv_bw_row, payload,
-                             interpret=_interpret())
+    with jax.named_scope("kernels.link_cost"):
+        return _lc.link_cost_fwd(starts, ends, sizes, n, ps, d, busy, head,
+                                 t_src, lat_row, inv_bw_row, payload,
+                                 interpret=_interpret())

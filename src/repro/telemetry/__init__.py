@@ -1,0 +1,53 @@
+"""repro.telemetry — the unified observability plane of both engines.
+
+One contract, two producers (DESIGN.md §8):
+
+* the **device** event-time fleet scan threads an optional, statically
+  gated telemetry carry (``simulate(..., telemetry=TelemetryConfig(nb,
+  horizon))``) and returns a :class:`TelemetryFrame` — per-bucket /
+  per-node event-kind counters, queue depth, busy time and event-buffer
+  occupancy high-water marks, all fixed-shape and vmappable (a cube per
+  sweep cell in one device call), and compiled out entirely when
+  disabled;
+* the **host** event heap records the same dynamics through its Hooks
+  via :class:`TraceRecorder`, which additionally exports Chrome-trace-
+  event JSON viewable in Perfetto.
+
+Both reduce to :class:`TelemetrySummary`; :func:`compare_summaries`
+asserts they agree bucket-for-bucket (counters/occupancy exact, derived
+integrals within f32-endpoint tolerance) — enforced on the paper
+scenarios by ``python -m repro.fleetsim.validate --telemetry``.
+
+    from repro import telemetry as tel
+
+    rec = tel.TraceRecorder(network=link)
+    orch = Orchestrator(topo, FastPreferentialQueue, hooks=rec.hooks, ...)
+    result = orch.run(requests)
+    rec.write("trace.json", requests)                 # -> ui.perfetto.dev
+    host = rec.summary(requests, topo, 32, result.end_time)
+
+    m = fleetsim.simulate(reqs, ta, params,
+                          telemetry=tel.TelemetryConfig(32, result.end_time))
+    dev = tel.TelemetrySummary.from_frame(m.telemetry)
+    assert tel.compare_summaries(host, dev).ok
+"""
+from repro.telemetry.summary import (DERIVED_ATOL, TelemetryAgreement,
+                                     TelemetrySummary, compare_summaries)
+from repro.telemetry.timeline import (KIND_ARRIVAL, KIND_DISCARD,
+                                      KIND_FORWARD, KIND_NAMES,
+                                      KIND_REARRIVAL, KIND_SERVE, N_KINDS,
+                                      TelemetryConfig, TelemetryFrame,
+                                      bucket_of, bucket_of_np, bucket_width,
+                                      interval_histogram,
+                                      interval_histogram_np, telemetry_init)
+from repro.telemetry.trace import TraceRecorder, validate_chrome_trace
+
+__all__ = [
+    "TelemetryConfig", "TelemetryFrame", "TelemetrySummary",
+    "TelemetryAgreement", "TraceRecorder",
+    "compare_summaries", "validate_chrome_trace",
+    "bucket_width", "bucket_of", "bucket_of_np",
+    "interval_histogram", "interval_histogram_np", "telemetry_init",
+    "KIND_ARRIVAL", "KIND_REARRIVAL", "KIND_FORWARD", "KIND_DISCARD",
+    "KIND_SERVE", "KIND_NAMES", "N_KINDS", "DERIVED_ATOL",
+]

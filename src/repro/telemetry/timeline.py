@@ -1,0 +1,167 @@
+"""Device-side telemetry: the fleet scan's time-binned observability cube.
+
+The event-time fleet simulator (DESIGN.md §7) exposes only end-of-run
+aggregates; this module adds the *dynamics* — per-bucket/per-node queue
+depth, busy time, event-buffer occupancy and event-kind counters — as
+fixed-shape tensors that ride the scan, so ``simulate_fn`` stays jittable
+and vmappable (one telemetry cube per sweep cell, all in one device
+call) and the whole plane is **statically compiled out when disabled**:
+the telemetry fields of the scan carry are ``None`` (empty pytrees), so
+a disabled run traces to the exact pre-telemetry jaxpr — bit-identical
+outputs, zero added carries, zero cost (guarded in
+tests/test_telemetry.py).
+
+Bucket contract (DESIGN.md §8): the run window ``[0, horizon)`` splits
+into ``n_buckets`` equal buckets of width ``w = f32(horizon) /
+f32(n_buckets)``; a point event at time ``t`` bins into ``min(floor(t /
+w), n_buckets - 1)`` — the division, the floor and ``w`` itself are all
+computed in float32 with the same operation order on both engines, so
+binning is bit-identical and an event exactly on a bucket edge ``k·w``
+lands in bucket ``k`` on both.  Time past the last bucket edge counts
+into the last bucket for point events and is truncated for the derived
+time integrals (depth / busy).
+
+Two halves:
+
+* **carried** (per scan step, two scatters): ``counts[node, bucket,
+  kind]`` — the five event kinds below, attributed to the node where the
+  strategy ran them — and ``occupancy_hwm[bucket]``, the high-water mark
+  of the deferred re-arrival buffer's live count (the device mirror of
+  "referrals in flight") sampled after every event step;
+* **derived** (one post-scan pass over the terminal per-request arrays,
+  nothing carried): ``queue_depth[node, bucket]`` — the time-average
+  ledger depth, from each served request's queue residency interval
+  ``[arrival + transfer, completion - proc/speed]`` — and
+  ``busy_time[node, bucket]`` from its execution interval
+  ``[completion - proc/speed, completion]``.
+
+The host :class:`~repro.telemetry.trace.TraceRecorder` computes the same
+summary from the event heap's hook stream; fleetsim/validate.py
+``--telemetry`` asserts they agree bucket-for-bucket.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# event kinds, in counts[..., kind] order.  DISCARD folds in fleetsim's
+# forced-push overflow (a capacity artifact the validation battery pins
+# to zero); SERVE counts admissions, forced ones included — exactly the
+# host engine's on_admit / on_discard hook semantics.
+KIND_ARRIVAL, KIND_REARRIVAL, KIND_FORWARD, KIND_DISCARD, KIND_SERVE = \
+    range(5)
+N_KINDS = 5
+KIND_NAMES = ("arrival", "rearrival", "forward", "discard", "serve")
+
+
+class TelemetryConfig(NamedTuple):
+    """Static telemetry knobs: both are compile-time constants.
+
+    ``n_buckets`` fixes every telemetry tensor shape; ``horizon`` is the
+    end of the binned window (events past it clip into the last bucket).
+    For cross-engine comparison pass the host run's ``end_time`` so both
+    summaries bin the same window.
+    """
+    n_buckets: int
+    horizon: float
+
+    @property
+    def width(self) -> np.float32:
+        """Bucket width, computed in f32 — the exact constant both the
+        device scan and the host recorder must divide by."""
+        return bucket_width(self.horizon, self.n_buckets)
+
+
+class TelemetryFrame(NamedTuple):
+    """The device-resident telemetry cube one simulate call produces.
+
+    Under vmap every array gains the sweep's leading axes — a
+    (scenario × policy × seed) sweep yields one stacked cube per cell.
+    """
+    counts: jnp.ndarray          # (K, NB, N_KINDS) i32 event-kind counters
+    queue_depth: jnp.ndarray     # (K, NB) f32 time-average ledger depth
+    busy_time: jnp.ndarray       # (K, NB) f32 CPU-busy UT within the bucket
+    occupancy_hwm: jnp.ndarray   # (NB,) i32 re-arrival buffer high water
+    bucket_width: jnp.ndarray    # () f32 — the f32 width (horizon / NB)
+
+    @property
+    def utilization(self) -> jnp.ndarray:
+        """(K, NB) busy fraction of each bucket, in [0, 1]."""
+        return self.busy_time / self.bucket_width
+
+
+def bucket_width(horizon: float, n_buckets: int) -> np.float32:
+    """The f32 bucket width — ``f32(f32(horizon) / f32(n_buckets))``.
+
+    Computed once on the host in float32 and baked into both engines'
+    binning, so ``t / w`` is the same operation on the same operands
+    everywhere (DESIGN.md §8: this is what makes bucket agreement exact
+    rather than approximate).
+    """
+    if n_buckets <= 0:
+        raise ValueError(f"n_buckets must be positive, got {n_buckets}")
+    if not horizon > 0.0:
+        raise ValueError(f"horizon must be positive, got {horizon}")
+    return np.float32(np.float32(horizon) / np.float32(n_buckets))
+
+
+def bucket_of(t, width: np.float32, n_buckets: int):
+    """Bucket index of event time ``t`` (traced or numpy): ``min(floor(t
+    / w), NB - 1)``.  The clip happens on the float side so a +BIG dead-
+    step time cannot overflow the int cast."""
+    return jnp.clip(t / width, 0, n_buckets - 1).astype(jnp.int32)
+
+
+def bucket_of_np(t, width: np.float32, n_buckets: int) -> np.ndarray:
+    """Host mirror of :func:`bucket_of` — same f32 division, same floor
+    (truncation of a non-negative value), same clip."""
+    t32 = np.asarray(t, np.float32)
+    return np.clip((t32 / width).astype(np.int32), 0, n_buckets - 1)
+
+
+def interval_histogram(lo: jnp.ndarray, hi: jnp.ndarray, node: jnp.ndarray,
+                       valid: jnp.ndarray, n_nodes: int,
+                       width, n_buckets: int) -> jnp.ndarray:
+    """Per-(node, bucket) total overlap of R intervals ``[lo, hi]``.
+
+    The derived half of the telemetry cube: queue-depth and busy-time
+    integrals are both one call over the terminal per-request arrays.
+    Time outside ``[0, n_buckets · width)`` is truncated (DESIGN.md §8).
+    Invalid rows (never-served requests) contribute nothing; ``node``
+    may hold any value on those rows (the scatter drops out-of-range
+    indices).  Returns ``(n_nodes, n_buckets)`` sums in UT.
+    """
+    edges_lo = jnp.arange(n_buckets, dtype=lo.dtype) * width
+    edges_hi = edges_lo + width
+    ov = jnp.clip(jnp.minimum(hi[:, None], edges_hi[None, :])
+                  - jnp.maximum(lo[:, None], edges_lo[None, :]), 0.0)
+    ov = jnp.where(valid[:, None], ov, 0.0)
+    idx = jnp.where(valid, node, n_nodes)            # n_nodes => dropped
+    return jnp.zeros((n_nodes, n_buckets), lo.dtype).at[idx].add(
+        ov, mode="drop")
+
+
+def interval_histogram_np(lo, hi, node, valid, n_nodes: int,
+                          width, n_buckets: int) -> np.ndarray:
+    """Numpy mirror of :func:`interval_histogram` (f32 throughout), for
+    the host-side :class:`~repro.telemetry.summary.TelemetrySummary`."""
+    lo = np.asarray(lo, np.float32)
+    hi = np.asarray(hi, np.float32)
+    edges_lo = (np.arange(n_buckets, dtype=np.float32)
+                * np.float32(width))
+    edges_hi = edges_lo + np.float32(width)
+    ov = np.clip(np.minimum(hi[:, None], edges_hi[None, :])
+                 - np.maximum(lo[:, None], edges_lo[None, :]), 0.0, None)
+    ov[~np.asarray(valid, bool)] = 0.0
+    out = np.zeros((n_nodes, n_buckets), np.float32)
+    np.add.at(out, np.clip(np.asarray(node), 0, n_nodes - 1), ov)
+    return out
+
+
+def telemetry_init(n_nodes: int, n_buckets: int
+                   ) -> "tuple[jnp.ndarray, jnp.ndarray]":
+    """Fresh carried-telemetry tensors: (counts, occupancy_hwm)."""
+    return (jnp.zeros((n_nodes, n_buckets, N_KINDS), jnp.int32),
+            jnp.zeros((n_buckets,), jnp.int32))
